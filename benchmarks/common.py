@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: timing, CSV output, artifact paths."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def row(*cols) -> None:
+    print(",".join(str(c) for c in cols), flush=True)

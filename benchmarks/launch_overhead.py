@@ -1,0 +1,69 @@
+"""Paper Sec. 3.3 — environment-launch overhead.
+
+The paper found that repeatedly STARTING hundreds of MPI jobs could cost
+more than the simulation itself, and fixed it with MPMD batch launches and
+RAM-disk staging.  In the TPU-native design the entire fleet is ONE jitted
+program, so the analogous costs are:
+
+  * one-time: XLA compile of the fleet program (amortized over training,
+    the analog of the MPMD batch launch),
+  * per-iteration: dispatch + initial-state indexing from the device bank
+    (the analog of staging restart files from the RAM disk).
+
+This benchmark measures both vs fleet size and reports the per-env overhead
+the paper's Sec. 3.3 worries about — it is microseconds here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import relexi_hit
+from repro.core import policy as policy_lib, rollout as rollout_lib
+from repro.cfd import initial, spectra
+
+from . import common
+
+
+def run(quick: bool = True) -> dict:
+    env_cfg = relexi_hit.reduced()
+    pcfg = policy_lib.PolicyConfig(n_nodes=env_cfg.n_poly + 1,
+                                   cs_max=env_cfg.cs_max)
+    params = policy_lib.init(jax.random.PRNGKey(0), pcfg)
+    e_dns = jnp.asarray(spectra.reference_spectrum(env_cfg), jnp.float32)
+    bank = initial.make_state_bank(jax.random.PRNGKey(1), env_cfg, 9)
+
+    rows = []
+    common.row("# sec3.3_launch_overhead", "n_envs", "compile_s",
+               "staging_us_per_env", "dispatch_us")
+    for n in (1, 4) if quick else (1, 4, 16):
+        u0 = jnp.take(bank, jnp.arange(n) % 8, axis=0)
+
+        def step_once(p, u, k):
+            return rollout_lib.rollout(p, pcfg, env_cfg, e_dns, u, k)
+
+        fn = jax.jit(step_once)
+        t0 = time.perf_counter()
+        fn.lower(params, u0, jax.random.PRNGKey(0)).compile()
+        compile_s = time.perf_counter() - t0
+
+        stage = jax.jit(lambda k: jnp.take(bank, jax.random.randint(
+            k, (n,), 0, 8), axis=0))
+        t_stage = common.timeit(stage, jax.random.PRNGKey(3), warmup=1,
+                                iters=3)
+        # dispatch-only cost: trivial jitted fn of the same arity
+        f_disp = jax.jit(lambda p, u, k: u)
+        t_disp = common.timeit(f_disp, params, u0, jax.random.PRNGKey(0),
+                               warmup=1, iters=5)
+        rows.append({"n_envs": n, "compile_s": compile_s,
+                     "staging_s": t_stage, "dispatch_s": t_disp})
+        common.row("sec3.3", n, f"{compile_s:.2f}",
+                   f"{t_stage/n*1e6:.1f}", f"{t_disp*1e6:.1f}")
+    common.save_json("launch_overhead.json", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run(quick=True)

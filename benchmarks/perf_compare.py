@@ -1,0 +1,67 @@
+"""§Perf reproducibility: print baseline-vs-optimized comparisons from the
+tagged dry-run artifacts (see EXPERIMENTS.md §Perf artifact index).
+
+    PYTHONPATH=src python -m benchmarks.perf_compare
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import common
+
+DRYRUN_DIR = os.path.join(common.ARTIFACTS, "dryrun")
+
+# (arch, shape, tag) -> short description
+COMPARISONS = [
+    ("h2o-danube-1.8b", "train_4k", "dp",
+     "batch x (data,model) + ZeRO-3 (hillclimb cell 1, iter 1)"),
+    ("h2o-danube-1.8b", "train_4k", "dp_noremat", "iter 2 (refuted: memory)"),
+    ("h2o-danube-1.8b", "train_4k", "dp_dots", "iter 3 (refuted)"),
+    ("h2o-danube-1.8b", "train_4k", "dp_projdots", "iter 4 (partial)"),
+    ("h2o-danube-1.8b", "train_4k", "dp_savew", "iter 5 (refuted)"),
+    ("command-r-35b", "decode_32k", "flash",
+     "flash-decoding + pure-TP serve (hillclimb cell 2)"),
+    ("command-r-35b", "decode_32k", "flash_bf16", "+ bf16 serving weights"),
+    ("rwkv6-1.6b", "train_4k", "dp", "generality: same relayout"),
+    ("gemma2-27b", "decode_32k", "flash", "generality: flash decode"),
+    ("llava-next-mistral-7b", "decode_32k", "flash", "generality"),
+    ("h2o-danube-1.8b", "long_500k", "flash", "generality"),
+]
+
+
+def _load(arch: str, shape: str, tag: str = "") -> dict | None:
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(DRYRUN_DIR, f"single_{arch}_{shape}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(quick: bool = True) -> dict:
+    common.row("# perf_compare", "arch", "shape", "variant",
+               "collective_s", "compute_s", "memory_s", "frac", "note")
+    n = 0
+    for arch, shape, tag, note in COMPARISONS:
+        base, opt = _load(arch, shape), _load(arch, shape, tag)
+        if not base or not opt or base["status"] != "ok" \
+                or opt["status"] != "ok":
+            continue
+        for label, rec in (("baseline", base), (tag, opt)):
+            t = rec["roofline"]
+            common.row("perf", arch, shape, label,
+                       f"{t['collective_s']:.4f}", f"{t['compute_s']:.4f}",
+                       f"{t['memory_s']:.4f}",
+                       f"{t['roofline_fraction']:.3f}",
+                       note if label != "baseline" else "")
+        n += 1
+    if n == 0:
+        print("no tagged perf artifacts found; run the §Perf commands in "
+              "EXPERIMENTS.md first")
+    return {"n_comparisons": n}
+
+
+if __name__ == "__main__":
+    run()

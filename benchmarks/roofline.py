@@ -1,0 +1,72 @@
+"""Roofline table: reads the dry-run artifacts (launch/dryrun.py) and prints
+the per-(arch x shape) compute/memory/collective terms — the §Roofline
+source of EXPERIMENTS.md.  Run the dry-run first:
+
+    python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import common
+
+DRYRUN_DIR = os.path.join(common.ARTIFACTS, "dryrun")
+
+
+def load(mesh: str = "single", tag: str = "") -> list[dict]:
+    from repro.configs.shapes import SHAPES
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"{mesh}_*.json"))):
+        base = os.path.basename(path)
+        untagged = any(base.endswith(f"_{s}.json") for s in SHAPES)
+        if tag and not base.endswith(f"_{tag}.json"):
+            continue
+        if not tag and not untagged:
+            continue
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def print_table(mesh: str = "single", tag: str = "") -> list[dict]:
+    rows = load(mesh, tag)
+    common.row("# roofline", "arch", "shape", "status", "bound",
+               "compute_s", "memory_s", "memory_raw_s", "collective_s",
+               "roofline_frac", "useful_flop_ratio")
+    for r in rows:
+        if r["status"] != "ok":
+            common.row("roofline", r["arch"], r["shape"], r["status"],
+                       r.get("reason", r.get("error", ""))[:60], "", "", "",
+                       "", "", "")
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flop_ratio")
+        common.row("roofline", r["arch"], r["shape"], "ok", t["bound"],
+                   f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+                   f"{t.get('memory_raw_s', t['memory_s']):.4f}",
+                   f"{t['collective_s']:.4f}",
+                   f"{t['roofline_fraction']:.3f}",
+                   f"{ratio:.2f}" if ratio else "")
+    return rows
+
+
+def run(quick: bool = True) -> dict:
+    if not os.path.isdir(DRYRUN_DIR) or not os.listdir(DRYRUN_DIR):
+        print("no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return {}
+    rows = print_table("single")
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+        common.row("# hillclimb-candidates",
+                   f"worst_fraction={worst['arch']}/{worst['shape']}",
+                   f"most_collective={coll['arch']}/{coll['shape']}")
+    return {"n_cells": len(rows)}
+
+
+if __name__ == "__main__":
+    run()

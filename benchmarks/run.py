@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    python -m benchmarks.run [--full] [--only fig3,fig4,fig5,launch,roofline]
+
+Outputs CSV-ish rows (grep-able by figure tag) and JSON artifacts under
+benchmarks/artifacts/.  The roofline section reads the dry-run artifacts —
+run `python -m repro.launch.dryrun --all --mesh both` first for the full
+table (skipped gracefully otherwise).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger sweeps (slower)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig3,fig4,fig5,launch,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (launch_overhead, perf_compare, roofline, scaling_strong,
+                   scaling_weak, training_curves)
+
+    sections = [
+        ("fig3", "weak scaling (paper Fig. 3)", scaling_weak.run),
+        ("fig4", "strong scaling (paper Fig. 4)", scaling_strong.run),
+        ("fig5", "training + baselines (paper Fig. 5 / Table 1)",
+         training_curves.run),
+        ("launch", "launch overhead (paper Sec. 3.3)", launch_overhead.run),
+        ("roofline", "roofline table (dry-run artifacts)", roofline.run),
+        ("perf", "perf hillclimb comparisons (EXPERIMENTS.md §Perf)",
+         perf_compare.run),
+    ]
+    for tag, title, fn in sections:
+        if only and tag not in only:
+            continue
+        print(f"\n=== {title} ===", flush=True)
+        t0 = time.perf_counter()
+        fn(quick=quick)
+        print(f"--- {tag} done in {time.perf_counter()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

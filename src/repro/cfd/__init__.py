@@ -1,0 +1,16 @@
+"""FLEXI substrate: DGSEM compressible Navier-Stokes LES of forced HIT."""
+from .dgsem import DGParams
+from .solver import HITConfig, advance_rl_interval
+from .env import EnvState, StepResult, observe, reset_from_bank, reset_random, step
+
+__all__ = [
+    "DGParams",
+    "HITConfig",
+    "advance_rl_interval",
+    "EnvState",
+    "StepResult",
+    "observe",
+    "reset_from_bank",
+    "reset_random",
+    "step",
+]

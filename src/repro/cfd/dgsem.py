@@ -1,0 +1,234 @@
+"""Discontinuous-Galerkin spectral element (DGSEM) operators on a periodic
+Cartesian mesh — the JAX port of FLEXI's core discretization (Krais et al.
+2021), restricted to the homogeneous-isotropic-turbulence box the paper uses.
+
+Layout convention for nodal state arrays:
+
+    u.shape = (..., Kx, Ky, Kz, n, n, n, C)
+
+with element axes at positions (-7, -6, -5), intra-element GLL node axes at
+(-4, -3, -2) and the channel axis last.  `...` carries the environment batch;
+all operators are batch-transparent and therefore `vmap`/`shard_map` friendly.
+
+The per-direction derivative is a tiny (n x n) matrix contraction applied over
+a huge batch of elements — the solver's dominant FLOP term.  The jnp path here
+is the reference; `repro.kernels.ops.dg_derivative` provides the fused Pallas
+TPU kernel with an identical contract (see kernels/dg_derivative.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gll
+
+# Element axes / node axes for direction d in {0,1,2}.
+ELEM_AXIS = (-7, -6, -5)
+NODE_AXIS = (-4, -3, -2)
+
+
+@dataclasses.dataclass(frozen=True)
+class DGParams:
+    """Static (hashable) discretization parameters.
+
+    All operator matrices are numpy constants closed over by jit — they never
+    become traced values.
+    """
+
+    n_poly: int
+    n_elem: int
+    length: float = 2.0 * np.pi
+
+    @property
+    def n(self) -> int:
+        return self.n_poly + 1
+
+    @property
+    def dx(self) -> float:
+        return self.length / self.n_elem
+
+    @property
+    def jac(self) -> float:
+        """d(xi)/dx: reference-to-physical scaling for derivatives."""
+        return 2.0 / self.dx
+
+    @property
+    def n_dof_dir(self) -> int:
+        return self.n_elem * self.n
+
+    # --- cached numpy operators -------------------------------------------
+    def nodes_weights(self) -> tuple[np.ndarray, np.ndarray]:
+        return gll.gll_nodes_weights(self.n_poly)
+
+    def deriv_matrix(self) -> np.ndarray:
+        return gll.lagrange_derivative_matrix(self.n_poly)
+
+    def interp_to_uniform(self) -> np.ndarray:
+        x_gll, _ = self.nodes_weights()
+        return gll.lagrange_interpolation_matrix(x_gll, gll.equispaced_nodes(self.n))
+
+    def node_coords(self) -> np.ndarray:
+        """Physical coordinates of every GLL node, shape (K, n) per direction."""
+        x_gll, _ = self.nodes_weights()
+        offsets = (np.arange(self.n_elem) + 0.5) * self.dx
+        return offsets[:, None] + 0.5 * self.dx * x_gll[None, :]
+
+
+def deriv_along(u: jax.Array, d_matrix: jax.Array, direction: int) -> jax.Array:
+    """Apply the Lagrange derivative matrix along node axis `direction`.
+
+    out[..., i, ...] = sum_m D[i, m] u[..., m, ...]   (reference coords)
+    """
+    axis = NODE_AXIS[direction] + u.ndim
+    moved = jnp.moveaxis(u, axis, -1)
+    out = moved @ d_matrix.T
+    return jnp.moveaxis(out, -1, axis)
+
+
+def _face_slices(u: jax.Array, direction: int) -> tuple[jax.Array, jax.Array]:
+    """Trace values at the two faces of every element along `direction`.
+
+    Returns (u_at_node0, u_at_nodeN) with the node axis removed.
+    """
+    axis = NODE_AXIS[direction] + u.ndim
+    lo = jax.lax.index_in_dim(u, 0, axis, keepdims=False)
+    hi = jax.lax.index_in_dim(u, u.shape[axis] - 1, axis, keepdims=False)
+    return lo, hi
+
+
+def neighbor_traces(u: jax.Array, direction: int) -> tuple[jax.Array, jax.Array]:
+    """States meeting at the 'right' face of every element along `direction`.
+
+    face f sits between element e (its node N trace -> `left`) and element
+    e+1 (its node 0 trace -> `right`); periodic wrap via roll.
+    """
+    lo, hi = _face_slices(u, direction)
+    elem_axis = ELEM_AXIS[direction] + lo.ndim + 1  # one axis was dropped
+    right = jnp.roll(lo, shift=-1, axis=elem_axis)
+    return hi, right
+
+
+def surface_lift(
+    du: jax.Array,
+    flux_jump_right: jax.Array,
+    flux_jump_left: jax.Array,
+    direction: int,
+    inv_w_end: tuple[float, float],
+) -> jax.Array:
+    """Add the strong-form DGSEM surface correction along `direction`.
+
+    du_i += (delta_iN / w_N) * (F* - F)_right  -  (delta_i0 / w_0) * (F* - F)_left
+    """
+    axis = NODE_AXIS[direction] + du.ndim
+    moved = jnp.moveaxis(du, axis, -1)  # (..., C, n) ordering after move
+    inv_w0, inv_wn = inv_w_end
+    moved = moved.at[..., -1].add(inv_wn * flux_jump_right)
+    moved = moved.at[..., 0].add(-inv_w0 * flux_jump_left)
+    return jnp.moveaxis(moved, -1, axis)
+
+
+def dg_gradient(
+    q: jax.Array,
+    dg: DGParams,
+    d_matrix: jax.Array,
+    inv_w_end: tuple[float, float],
+    vol_derivs: tuple[jax.Array, jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """BR1-style DG gradient of nodal field q (..., K,K,K, n,n,n, C).
+
+    Uses central (arithmetic-mean) interface values.  Returns gradient with a
+    new leading channel of size 3 appended at the end: (..., C, 3).
+    `vol_derivs` optionally supplies the three reference-space volume
+    derivatives (e.g. from the fused Pallas kernel kernels.ops.dg_derivative3).
+    """
+    grads = []
+    for d in range(3):
+        vol = deriv_along(q, d_matrix, d) if vol_derivs is None else vol_derivs[d]
+        q_left, q_right = neighbor_traces(q, d)
+        q_star_right = 0.5 * (q_left + q_right)  # face between e, e+1
+        # jump contributions: at node N of e use face e|e+1, at node 0 of e
+        # use face e-1|e  (roll back).
+        elem_axis = ELEM_AXIS[d] + q_star_right.ndim + 1
+        lo, hi = _face_slices(q, d)
+        jump_right = q_star_right - hi
+        q_star_left = jnp.roll(q_star_right, shift=1, axis=elem_axis)
+        jump_left = q_star_left - lo
+        g = surface_lift(vol, jump_right, jump_left, d, inv_w_end)
+        grads.append(g * dg.jac)
+    return jnp.stack(grads, axis=-1)
+
+
+def flux_differencing(
+    prim: tuple[jax.Array, ...],
+    two_point_flux,
+    d_matrix: jax.Array,
+    direction: int,
+) -> jax.Array:
+    """Split-form volume integral:  out_i = sum_j 2 D_ij F#(u_i, u_j).
+
+    `prim` is a tuple of nodal primitive arrays (last axis = channels for the
+    velocity entry, none for scalars).  The pairwise states are formed along
+    the node axis of `direction`; reduces to the standard derivative of the
+    flux for F# = {F} on linear problems (SBP property).
+    """
+    def pairwise(q, is_vec):
+        # absolute node-axis position: scalars have no trailing channel axis
+        a = q.ndim + NODE_AXIS[direction] + (0 if is_vec else 1)
+        moved = jnp.moveaxis(q, a, -2 if is_vec else -1)
+        if is_vec:  # (..., m, C) -> (..., m_i, m_j, C)
+            return moved[..., :, None, :], moved[..., None, :, :]
+        return moved[..., :, None], moved[..., None, :]
+
+    rho, vel, p, e = prim
+    (rho_a, rho_b) = pairwise(rho, False)
+    (vel_a, vel_b) = pairwise(vel, True)
+    (p_a, p_b) = pairwise(p, False)
+    (e_a, e_b) = pairwise(e, False)
+    f_pair = two_point_flux((rho_a, vel_a, p_a, e_a), (rho_b, vel_b, p_b, e_b), direction)
+    # contract the j axis with 2*D:  (..., m_i, m_j, C) x D[i, j] -> (..., m_i, C)
+    out = 2.0 * jnp.einsum("ij,...ijc->...ic", d_matrix, f_pair)
+    return jnp.moveaxis(out, -2, NODE_AXIS[direction] + out.ndim)
+
+
+def dg_divergence(
+    fluxes: tuple[jax.Array, jax.Array, jax.Array],
+    fluxes_star: tuple[jax.Array, jax.Array, jax.Array],
+    dg: DGParams,
+    d_matrix: jax.Array,
+    inv_w_end: tuple[float, float],
+) -> jax.Array:
+    """Strong-form DG divergence with prescribed interface fluxes.
+
+    `fluxes[d]`       : nodal physical flux in direction d (..., n,n,n, C)
+    `fluxes_star[d]`  : numerical flux on the face between e and e+1 along d,
+                        shape like a trace (..., K,K,K, n,n, C) with the node
+                        axis of direction d removed.
+    Returns -div(F) in physical coordinates (the RHS convention).
+    """
+    out = None
+    for d in range(3):
+        vol = deriv_along(fluxes[d], d_matrix, d)
+        lo, hi = _face_slices(fluxes[d], d)
+        f_star_right = fluxes_star[d]
+        elem_axis = ELEM_AXIS[d] + f_star_right.ndim + 1
+        f_star_left = jnp.roll(f_star_right, shift=1, axis=elem_axis)
+        jump_right = f_star_right - hi
+        jump_left = f_star_left - lo
+        div_d = surface_lift(vol, jump_right, jump_left, d, inv_w_end) * dg.jac
+        out = div_d if out is None else out + div_d
+    return -out
+
+
+def quadrature_mean(q: jax.Array, dg: DGParams) -> jax.Array:
+    """Volume average of nodal field q over the whole box (per batch entry).
+
+    q: (..., K,K,K, n,n,n, C) -> (..., C)
+    """
+    _, w = dg.nodes_weights()
+    w = jnp.asarray(w, dtype=q.dtype) * 0.5  # reference [-1,1] -> unit mass
+    q = jnp.einsum("...xyzijkc,i,j,k->...c", q, w, w, w)
+    return q / (dg.n_elem**3)

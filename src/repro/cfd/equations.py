@@ -1,0 +1,157 @@
+"""Compressible Navier-Stokes physics for the DGSEM solver.
+
+Conservative state channels: [rho, rho*v1, rho*v2, rho*v3, E_total].
+Non-dimensional setup matching the paper's HIT box: box length 2*pi,
+target u_rms = 1, rho0 = 1; the Mach number sets the background pressure.
+
+The LES closure is Smagorinsky's model (paper Eq. 3) with a *per-element*
+coefficient C_s — the RL action.  `eddy_viscosity` is also provided as a
+fused Pallas kernel (kernels/smagorinsky.py); this module is the reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+GAMMA = 1.4
+R_GAS = 1.0
+CP = GAMMA * R_GAS / (GAMMA - 1.0)
+CV = R_GAS / (GAMMA - 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GasParams:
+    mu: float  # dynamic viscosity (rho0=1 -> equals kinematic)
+    prandtl: float = 0.72
+    prandtl_turb: float = 0.9
+
+
+def conservative_to_primitive(u: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """-> (rho, vel[...,3], pressure, temperature)."""
+    rho = u[..., 0]
+    vel = u[..., 1:4] / rho[..., None]
+    kinetic = 0.5 * rho * jnp.sum(vel * vel, axis=-1)
+    p = (GAMMA - 1.0) * (u[..., 4] - kinetic)
+    temp = p / (rho * R_GAS)
+    return rho, vel, p, temp
+
+
+def primitive_to_conservative(rho: jax.Array, vel: jax.Array, p: jax.Array) -> jax.Array:
+    mom = rho[..., None] * vel
+    e_tot = p / (GAMMA - 1.0) + 0.5 * rho * jnp.sum(vel * vel, axis=-1)
+    return jnp.concatenate([rho[..., None], mom, e_tot[..., None]], axis=-1)
+
+
+def sound_speed(rho: jax.Array, p: jax.Array) -> jax.Array:
+    return jnp.sqrt(GAMMA * p / rho)
+
+
+def advective_flux(u: jax.Array, direction: int) -> jax.Array:
+    """Euler flux F_d(u), channels like u."""
+    rho, vel, p, _ = conservative_to_primitive(u)
+    vn = vel[..., direction]
+    f_rho = u[..., 1 + direction]
+    f_mom = u[..., 1:4] * vn[..., None]
+    f_mom = f_mom.at[..., direction].add(p)
+    f_e = (u[..., 4] + p) * vn
+    return jnp.concatenate([f_rho[..., None], f_mom, f_e[..., None]], axis=-1)
+
+
+def lax_friedrichs_flux(u_l: jax.Array, u_r: jax.Array, direction: int) -> jax.Array:
+    """Local Lax-Friedrichs (Rusanov) numerical flux for the advective part."""
+    rho_l, vel_l, p_l, _ = conservative_to_primitive(u_l)
+    rho_r, vel_r, p_r, _ = conservative_to_primitive(u_r)
+    lam = jnp.maximum(
+        jnp.abs(vel_l[..., direction]) + sound_speed(rho_l, p_l),
+        jnp.abs(vel_r[..., direction]) + sound_speed(rho_r, p_r),
+    )
+    f_l = advective_flux(u_l, direction)
+    f_r = advective_flux(u_r, direction)
+    return 0.5 * (f_l + f_r) - 0.5 * lam[..., None] * (u_r - u_l)
+
+
+def strain_rate(grad_v: jax.Array) -> jax.Array:
+    """Symmetric rate-of-strain S_ij from velocity gradient (..., 3, 3).
+
+    grad_v[..., i, j] = d v_i / d x_j.
+    """
+    return 0.5 * (grad_v + jnp.swapaxes(grad_v, -1, -2))
+
+
+def strain_magnitude(s_ij: jax.Array) -> jax.Array:
+    """|S| = sqrt(2 S_ij S_ij)  (paper Eq. 3)."""
+    return jnp.sqrt(2.0 * jnp.sum(s_ij * s_ij, axis=(-1, -2)) + 1e-30)
+
+
+def eddy_viscosity(cs: jax.Array, delta: float, s_mag: jax.Array) -> jax.Array:
+    """nu_t = (C_s * Delta)^2 |S|  with per-element C_s broadcast to nodes."""
+    return (cs * delta) ** 2 * s_mag
+
+
+def viscous_flux(
+    u: jax.Array,
+    grad_prim: jax.Array,
+    nu_t: jax.Array,
+    gas: GasParams,
+    direction: int,
+) -> jax.Array:
+    """Viscous + SGS flux F_v_d.
+
+    grad_prim: gradients of (v1, v2, v3, T), shape (..., 4, 3) with the last
+    axis the derivative direction.
+    """
+    rho, vel, _, _ = conservative_to_primitive(u)
+    grad_v = grad_prim[..., 0:3, :]  # (..., 3 [component], 3 [direction])
+    grad_t = grad_prim[..., 3, :]  # (..., 3)
+    s_ij = strain_rate(grad_v)
+    div_v = grad_v[..., 0, 0] + grad_v[..., 1, 1] + grad_v[..., 2, 2]
+    mu_eff = gas.mu + rho * nu_t
+    # Stress tensor tau_ij = 2 mu_eff (S_ij - 1/3 div(v) delta_ij)
+    tau = 2.0 * mu_eff[..., None, None] * s_ij
+    third = (2.0 / 3.0) * mu_eff * div_v
+    tau = tau - third[..., None, None] * jnp.eye(3, dtype=u.dtype)
+    # Heat flux with laminar + turbulent conductivities.
+    k_eff = CP * (gas.mu / gas.prandtl + rho * nu_t / gas.prandtl_turb)
+    q_d = -k_eff * grad_t[..., direction]
+    tau_d = tau[..., :, direction]  # (..., 3)
+    work = jnp.sum(tau_d * vel, axis=-1)
+    zero = jnp.zeros_like(rho)
+    return jnp.concatenate(
+        [zero[..., None], tau_d, (work - q_d)[..., None]], axis=-1
+    )
+
+
+def kennedy_gruber_flux(
+    prim_a: tuple[jax.Array, ...],
+    prim_b: tuple[jax.Array, ...],
+    direction: int,
+) -> jax.Array:
+    """Kennedy & Gruber kinetic-energy-preserving two-point flux.
+
+    Used by the split-form (flux-differencing) DGSEM volume integral — the
+    stabilization FLEXI relies on for underresolved turbulence (Gassner,
+    Winters & Kopriva 2016).  prim_* = (rho, vel[...,3], p, e_spec) with
+    e_spec = E/rho the specific total energy.
+
+    f_rho = {rho}{u_d};  f_mom_i = {rho}{u_d}{u_i} + delta_id {p}
+    f_E   = {rho}{u_d}{e} + {p}{u_d}
+    """
+    rho_a, vel_a, p_a, e_a = prim_a
+    rho_b, vel_b, p_b, e_b = prim_b
+    rho_m = 0.5 * (rho_a + rho_b)
+    vel_m = 0.5 * (vel_a + vel_b)
+    p_m = 0.5 * (p_a + p_b)
+    e_m = 0.5 * (e_a + e_b)
+    vn = vel_m[..., direction]
+    f_rho = rho_m * vn
+    f_mom = f_rho[..., None] * vel_m
+    f_mom = f_mom.at[..., direction].add(p_m)
+    f_e = f_rho * e_m + p_m * vn
+    return jnp.concatenate([f_rho[..., None], f_mom, f_e[..., None]], axis=-1)
+
+
+def max_wave_speed(u: jax.Array) -> jax.Array:
+    rho, vel, p, _ = conservative_to_primitive(u)
+    return jnp.max(jnp.linalg.norm(vel, axis=-1) + sound_speed(rho, p))

@@ -1,0 +1,102 @@
+"""Initial-state generation for the HIT environment.
+
+The paper draws initial LES states from filtered DNS snapshots staged on a
+RAM disk.  Offline we have no DNS, so we synthesize statistically equivalent
+states: divergence-free Gaussian velocity fields with the von Karman-Pao
+target spectrum (Rogallo-style spectral sampling), evaluated exactly at the
+GLL nodes via band-limited Fourier interpolation.  The resulting bank of
+states is device-resident — the TPU-native version of the RAM-disk trick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gll, spectra
+from .equations import primitive_to_conservative
+from .solver import HITConfig
+
+
+def _solenoidal_spectral_field(key: jax.Array, n_grid: int, e_target: jax.Array) -> jax.Array:
+    """Random divergence-free velocity field on a uniform n^3 grid with shell
+    spectrum e_target (length n_shells). Returns (n, n, n, 3) real field."""
+    shells, n_shells, weight = spectra._shell_bins(n_grid)
+    noise = jax.random.normal(key, (n_grid, n_grid, n_grid, 3), dtype=jnp.float32)
+    vhat = jnp.fft.rfftn(noise, axes=(0, 1, 2))
+
+    k1 = np.fft.fftfreq(n_grid, d=1.0 / n_grid)
+    kr = np.fft.rfftfreq(n_grid, d=1.0 / n_grid)
+    kx, ky, kz = np.meshgrid(k1, k1, kr, indexing="ij")
+    k_vec = jnp.asarray(np.stack([kx, ky, kz], axis=-1), dtype=jnp.float32)
+    k_sq = jnp.sum(k_vec**2, axis=-1, keepdims=True)
+    k_sq = jnp.where(k_sq == 0, 1.0, k_sq)
+    # Zero the Nyquist planes: the Helmholtz projector is sign-ambiguous there
+    # and irfftn's Hermitian symmetrization would reintroduce divergence.
+    nyq = n_grid // 2
+    mask = (np.abs(kx) < nyq) & (np.abs(ky) < nyq) & (kz < nyq)
+    vhat = vhat * jnp.asarray(mask[..., None], dtype=vhat.dtype)
+    # Helmholtz projection: remove the compressive component.
+    proj = vhat - k_vec * jnp.sum(k_vec * vhat, axis=-1, keepdims=True) / k_sq
+    # Current shell energies -> rescale to target.
+    e_density = 0.5 * jnp.sum(jnp.abs(proj) ** 2, axis=-1) * jnp.asarray(weight) / (n_grid**6)
+    e_now = jax.ops.segment_sum(e_density.reshape(-1), jnp.asarray(shells.reshape(-1)),
+                                num_segments=n_shells)
+    scale = jnp.sqrt(e_target / jnp.maximum(e_now, 1e-30))
+    scale = jnp.where(e_target > 0, scale, 0.0)
+    proj = proj * scale[jnp.asarray(shells)][..., None]
+    vel = jnp.fft.irfftn(proj, s=(n_grid,) * 3, axes=(0, 1, 2))
+    return vel
+
+
+@functools.lru_cache(maxsize=16)
+def _fourier_to_gll_matrix(n_grid: int, n_elem: int, n_poly: int, length: float) -> np.ndarray:
+    """Complex (K*n, n_grid) matrix evaluating the uniform-grid Fourier series
+    at the global GLL coordinates of one direction."""
+    from .dgsem import DGParams
+
+    dg = DGParams(n_poly, n_elem, length)
+    x_gll = dg.node_coords().reshape(-1)  # (K*n,)
+    return gll.fourier_eval_matrix(n_grid, x_gll, length)
+
+
+def uniform_to_gll(field: jax.Array, cfg: HITConfig) -> jax.Array:
+    """Band-limited interpolation (..., N,N,N, C) uniform -> GLL nodal layout
+    (..., K,K,K, n,n,n, C)."""
+    n_grid = field.shape[-2]
+    mat = jnp.asarray(
+        _fourier_to_gll_matrix(n_grid, cfg.n_elem, cfg.n_poly, cfg.length),
+        dtype=jnp.complex64,
+    )
+    fhat = jnp.fft.fftn(field, axes=(-4, -3, -2))
+    for axis_offset in range(3):
+        axis = fhat.ndim - 4 + axis_offset
+        fhat = jnp.moveaxis(jnp.moveaxis(fhat, axis, -1) @ mat.T, -1, axis)
+    out = jnp.real(fhat)
+    # split each global axis (K*n) into (K, n), then order (...,K,K,K,n,n,n,C)
+    batch = out.shape[: out.ndim - 4]
+    k, n, c = cfg.n_elem, cfg.n_poly + 1, out.shape[-1]
+    out = out.reshape(batch + (k, n, k, n, k, n, c))
+    nd = out.ndim
+    perm = list(range(nd - 7)) + [nd - 7, nd - 5, nd - 3, nd - 6, nd - 4, nd - 2, nd - 1]
+    return jnp.transpose(out, perm)
+
+
+def sample_initial_state(key: jax.Array, cfg: HITConfig) -> jax.Array:
+    """One random conservative initial state (K,K,K,n,n,n,5)."""
+    n_grid = cfg.dg.n_dof_dir
+    e_target = jnp.asarray(spectra.reference_spectrum(cfg), dtype=jnp.float32)
+    vel_uniform = _solenoidal_spectral_field(key, n_grid, e_target)
+    vel = uniform_to_gll(vel_uniform[..., None, :].reshape(n_grid, n_grid, n_grid, 3), cfg)
+    rho = jnp.full(vel.shape[:-1], cfg.rho0, dtype=vel.dtype)
+    p = jnp.full(vel.shape[:-1], cfg.p0, dtype=vel.dtype)
+    return primitive_to_conservative(rho, vel, p)
+
+
+def make_state_bank(key: jax.Array, cfg: HITConfig, n_states: int) -> jax.Array:
+    """Bank of initial states (n_states, K,K,K,n,n,n,5); one is conventionally
+    held out as the unseen test state (index -1, as in the paper)."""
+    keys = jax.random.split(key, n_states)
+    return jax.vmap(lambda k: sample_initial_state(k, cfg))(keys)

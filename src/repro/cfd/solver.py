@@ -1,0 +1,241 @@
+"""HIT LES solver: RHS assembly, linear forcing and low-storage RK stepping.
+
+This is the transition function T(s_{t+1} | a_t, s_t) of the paper's MDP:
+given the current flow state and the per-element Smagorinsky coefficients
+(the RL action), advance the compressible Navier-Stokes LES by Delta t_RL.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dgsem, equations
+from .dgsem import DGParams
+from .equations import GasParams
+
+# Carpenter & Kennedy (1994) five-stage fourth-order low-storage RK —
+# FLEXI's default explicit integrator.
+_RK_A = np.array(
+    [
+        0.0,
+        -567301805773.0 / 1357537059087.0,
+        -2404267990393.0 / 2016746695238.0,
+        -3550918686646.0 / 2091501179385.0,
+        -1275806237668.0 / 842570457699.0,
+    ]
+)
+_RK_B = np.array(
+    [
+        1432997174477.0 / 9575080441755.0,
+        5161836677717.0 / 13612068292357.0,
+        1720146321549.0 / 2090206949498.0,
+        3134564353537.0 / 4481467310338.0,
+        2277821191437.0 / 14882151754819.0,
+    ]
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HITConfig:
+    """Static configuration of one HIT LES environment (paper Table 1)."""
+
+    n_poly: int = 5
+    n_elem: int = 4
+    length: float = 2.0 * np.pi
+    # gas / flow
+    mach: float = 0.3
+    nu: float = 1.8e-3
+    rho0: float = 1.0
+    u_rms: float = 1.0
+    prandtl: float = 0.72
+    prandtl_turb: float = 0.9
+    # forcing (Lundgren linear forcing + TKE proportional controller)
+    forcing_a0: float = 0.3
+    # time stepping
+    cfl: float = 0.35
+    dt_rl: float = 0.1
+    t_end: float = 5.0
+    # reward (paper Table 1)
+    k_max: int = 9
+    alpha: float = 0.4
+    cs_max: float = 0.5
+    # Pallas kernels for the gradient + eddy-viscosity hot spots (interpret
+    # mode off-TPU; the jnp path is the oracle). Default off on CPU.
+    use_kernels: bool = False
+    # synthetic DNS target spectrum (von Karman-Pao)
+    k_peak: float = 4.0
+    k_eta: float = 48.0
+
+    @property
+    def dg(self) -> DGParams:
+        return DGParams(self.n_poly, self.n_elem, self.length)
+
+    @property
+    def k_tke(self) -> float:
+        """Target turbulent kinetic energy 3/2 u_rms^2."""
+        return 1.5 * self.u_rms**2
+
+    @property
+    def gas(self) -> GasParams:
+        return GasParams(mu=self.rho0 * self.nu, prandtl=self.prandtl,
+                         prandtl_turb=self.prandtl_turb)
+
+    @property
+    def sound_speed0(self) -> float:
+        return self.u_rms / self.mach
+
+    @property
+    def p0(self) -> float:
+        return self.rho0 * self.sound_speed0**2 / equations.GAMMA
+
+    @property
+    def delta_filter(self) -> float:
+        """LES filter width: element size over number of nodes per direction."""
+        return self.dg.dx / (self.n_poly + 1)
+
+    @property
+    def dt(self) -> float:
+        """Fixed stable timestep (DG CFL ~ 1/(2N+1)) that divides dt_rl."""
+        v_max = self.sound_speed0 + 3.0 * self.u_rms
+        dt_stable = self.cfl * self.dg.dx / (v_max * (2 * self.n_poly + 1))
+        n_sub = int(np.ceil(self.dt_rl / dt_stable))
+        return self.dt_rl / n_sub
+
+    @property
+    def n_substeps(self) -> int:
+        return int(round(self.dt_rl / self.dt))
+
+    @property
+    def n_actions(self) -> int:
+        return int(round(self.t_end / self.dt_rl))
+
+    def operators(self) -> dict:
+        """Jit-constant operator matrices."""
+        dg = self.dg
+        _, w = dg.nodes_weights()
+        return {
+            "D": jnp.asarray(dg.deriv_matrix(), dtype=jnp.float32),
+            "inv_w_end": (float(1.0 / w[0]), float(1.0 / w[-1])),
+        }
+
+
+def broadcast_cs(cs_elem: jax.Array, cfg: HITConfig) -> jax.Array:
+    """Per-element coefficients (..., K,K,K) -> nodal field (..., K,K,K,n,n,n)."""
+    n = cfg.n_poly + 1
+    return jnp.broadcast_to(
+        cs_elem[..., None, None, None],
+        cs_elem.shape + (n, n, n),
+    )
+
+
+def navier_stokes_rhs(
+    u: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict
+) -> jax.Array:
+    """-div(F_adv - F_visc) + forcing, the full semi-discrete RHS.
+
+    Advective volume terms use *split-form* flux differencing with the
+    Kennedy-Gruber kinetic-energy-preserving two-point flux — FLEXI's
+    stabilization for underresolved turbulence (standard-form collocated
+    DGSEM aliases and blows up on this test case within a few steps).
+    Surface terms use local Lax-Friedrichs; viscous terms are BR1-style
+    central.
+    """
+    dg, gas = cfg.dg, cfg.gas
+    d_matrix, inv_w_end = ops["D"], ops["inv_w_end"]
+
+    rho, vel, p, temp = equations.conservative_to_primitive(u)
+    e_spec = u[..., 4] / rho
+    prim = (rho, vel, p, e_spec)
+    q_prim = jnp.concatenate([vel, temp[..., None]], axis=-1)
+    if cfg.use_kernels:
+        # fused Pallas hot spots: one HBM pass for the 3-direction volume
+        # derivative, fused strain->nu_t chain (kernels/{dg_derivative,
+        # smagorinsky}.py; jnp path below is the validated oracle).
+        from ..kernels import ops as kops
+
+        n = cfg.n_poly + 1
+        qb = q_prim.reshape((-1, n, n, n, q_prim.shape[-1]))
+        vols = kops.dg_derivative3(qb, d_matrix)
+        vol_derivs = tuple(v.reshape(q_prim.shape) for v in vols)
+        grad_prim = dgsem.dg_gradient(q_prim, dg, d_matrix, inv_w_end,
+                                      vol_derivs=vol_derivs)
+        grad_v = grad_prim[..., 0:3, :]
+        nu_t = kops.smagorinsky_nut(
+            grad_v.reshape((-1, 3, 3)), cs_nodes.reshape((-1,)),
+            cfg.delta_filter,
+        ).reshape(cs_nodes.shape)
+    else:
+        grad_prim = dgsem.dg_gradient(q_prim, dg, d_matrix, inv_w_end)
+        grad_v = grad_prim[..., 0:3, :]
+        s_mag = equations.strain_magnitude(equations.strain_rate(grad_v))
+        nu_t = equations.eddy_viscosity(cs_nodes, cfg.delta_filter, s_mag)
+
+    rhs = None
+    for d in range(3):
+        # --- advective: split-form volume + LLF surface -------------------
+        vol_adv = dgsem.flux_differencing(
+            prim, equations.kennedy_gruber_flux, d_matrix, d
+        )
+        f_adv_nodes = equations.advective_flux(u, d)
+        u_left, u_right = dgsem.neighbor_traces(u, d)
+        f_star_adv = equations.lax_friedrichs_flux(u_left, u_right, d)
+        # --- viscous: standard derivative volume + central surface --------
+        f_visc = equations.viscous_flux(u, grad_prim, nu_t, gas, d)
+        vol_visc = dgsem.deriv_along(f_visc, d_matrix, d)
+        fv_left, fv_right = dgsem.neighbor_traces(f_visc, d)
+        f_star_visc = 0.5 * (fv_left + fv_right)
+
+        vol = vol_adv - vol_visc
+        f_star = f_star_adv - f_star_visc
+        f_nodes = f_adv_nodes - f_visc
+        lo, hi = dgsem._face_slices(f_nodes, d)
+        elem_axis = dgsem.ELEM_AXIS[d] + f_star.ndim + 1
+        f_star_left = jnp.roll(f_star, shift=1, axis=elem_axis)
+        div_d = dgsem.surface_lift(vol, f_star - hi, f_star_left - lo, d, inv_w_end)
+        div_d = div_d * dg.jac
+        rhs = -div_d if rhs is None else rhs - div_d
+
+    # --- Lundgren linear forcing with proportional TKE controller ----------
+    mom = u[..., 1:4]
+    mom_mean = dgsem.quadrature_mean(mom, dg)  # (..., 3)
+    mom_fluct = mom - mom_mean[..., None, None, None, None, None, None, :]
+    ke_density = 0.5 * jnp.sum(mom * vel, axis=-1, keepdims=True)
+    k_now = dgsem.quadrature_mean(ke_density, dg)[..., 0]  # (...,)
+    a_eff = cfg.forcing_a0 * jnp.clip(cfg.k_tke / jnp.maximum(k_now, 0.1 * cfg.k_tke), 0.0, 3.0)
+    a_eff = a_eff[..., None, None, None, None, None, None]
+    f_mom = a_eff[..., None] * mom_fluct
+    f_e = jnp.sum(f_mom * vel, axis=-1, keepdims=True)
+    forcing = jnp.concatenate(
+        [jnp.zeros_like(rhs[..., :1]), f_mom, f_e], axis=-1
+    )
+    return rhs + forcing
+
+
+def rk_substep(u: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict) -> jax.Array:
+    """One low-storage RK5(4) step of size cfg.dt."""
+    dt = jnp.asarray(cfg.dt, dtype=u.dtype)
+    du = jnp.zeros_like(u)
+    for stage in range(5):
+        rhs = navier_stokes_rhs(u, cs_nodes, cfg, ops)
+        du = _RK_A[stage] * du + dt * rhs
+        u = u + _RK_B[stage] * du
+    return u
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def advance_rl_interval(u: jax.Array, cs_elem: jax.Array, cfg: HITConfig) -> jax.Array:
+    """Advance the LES by Delta t_RL under fixed per-element C_s (one MDP
+    transition).  This is the unit of work the paper distributes over MPI
+    ranks; here it is one XLA program."""
+    ops = cfg.operators()
+    cs_nodes = broadcast_cs(cs_elem, cfg)
+
+    def body(u, _):
+        return rk_substep(u, cs_nodes, cfg, ops), None
+
+    u, _ = jax.lax.scan(body, u, None, length=cfg.n_substeps)
+    return u

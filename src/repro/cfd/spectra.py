@@ -1,0 +1,102 @@
+"""Energy spectra: nodal->uniform interpolation, shell-averaged FFT spectrum,
+and the synthetic von Karman-Pao reference spectrum standing in for the
+paper's DNS ground truth (see DESIGN.md assumption ledger)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gll
+from .dgsem import DGParams
+from .equations import conservative_to_primitive
+from .solver import HITConfig
+
+
+def nodal_to_uniform(q: jax.Array, dg: DGParams) -> jax.Array:
+    """Interpolate nodal DG field (..., K,K,K, n,n,n, C) to the globally
+    uniform (cell-centered) grid (..., K*n, K*n, K*n, C)."""
+    v = jnp.asarray(dg.interp_to_uniform(), dtype=q.dtype)  # (n, n)
+    for axis_offset in range(3):
+        axis = q.ndim - 4 + axis_offset  # node axes at -4,-3,-2
+        q = jnp.moveaxis(jnp.moveaxis(q, axis, -1) @ v.T, -1, axis)
+    # interleave element and node axes: (..., Kx,Ky,Kz, nx,ny,nz, C)
+    nd = q.ndim
+    perm = list(range(nd - 7)) + [nd - 7, nd - 4, nd - 6, nd - 3, nd - 5, nd - 2, nd - 1]
+    q = jnp.transpose(q, perm)
+    batch = q.shape[: nd - 7]
+    k, n, c = dg.n_elem, dg.n, q.shape[-1]
+    return q.reshape(batch + (k * n, k * n, k * n, c))
+
+
+@functools.lru_cache(maxsize=32)
+def _shell_bins(n_grid: int) -> tuple[np.ndarray, int, np.ndarray]:
+    """Integer shell index |k| for an rfft 3-D grid, and the number of shells."""
+    k1 = np.fft.fftfreq(n_grid, d=1.0 / n_grid)
+    kr = np.fft.rfftfreq(n_grid, d=1.0 / n_grid)
+    kx, ky, kz = np.meshgrid(k1, k1, kr, indexing="ij")
+    k_mag = np.sqrt(kx**2 + ky**2 + kz**2)
+    shells = np.rint(k_mag).astype(np.int32)
+    n_shells = int(shells.max()) + 1
+    # rfft stores half the spectrum: weight interior kz planes twice.
+    weight = np.where((kz == 0) | (2 * kz == n_grid), 1.0, 2.0)
+    return shells, n_shells, weight
+
+
+def energy_spectrum(vel_uniform: jax.Array) -> jax.Array:
+    """Shell-averaged kinetic-energy spectrum E(k) of (..., N,N,N,3) velocity.
+
+    Normalized such that sum_k E(k) = 0.5 <|v|^2> (TKE).
+    """
+    n = vel_uniform.shape[-2]
+    shells, n_shells, weight = _shell_bins(n)
+    vhat = jnp.fft.rfftn(vel_uniform, axes=(-4, -3, -2)) / (n**3)
+    e_density = 0.5 * jnp.sum(jnp.abs(vhat) ** 2, axis=-1) * jnp.asarray(weight)
+    flat = e_density.reshape(e_density.shape[:-3] + (-1,))
+    seg = jnp.asarray(shells.reshape(-1))
+    spec = jax.vmap(lambda f: jax.ops.segment_sum(f, seg, num_segments=n_shells))(
+        flat.reshape((-1, flat.shape[-1]))
+    )
+    return spec.reshape(e_density.shape[:-3] + (n_shells,))
+
+
+def vkp_spectrum(k: np.ndarray, u_rms: float, k_peak: float, k_eta: float) -> np.ndarray:
+    """von Karman-Pao model spectrum, normalized to integrate (over the
+    discrete shells) to 1.5 u_rms^2 — the synthetic E_DNS(k)."""
+    k = np.asarray(k, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        shape = (k / k_peak) ** 4 / (1.0 + (k / k_peak) ** 2) ** (17.0 / 6.0)
+        spec = shape * np.exp(-2.0 * (k / k_eta) ** 2)
+    spec = np.where(k > 0, spec, 0.0)
+    tke = 1.5 * u_rms**2
+    spec = spec * (tke / max(np.sum(spec), 1e-300))
+    return spec
+
+
+def reference_spectrum(cfg: HITConfig) -> np.ndarray:
+    """E_DNS(k) on the shells of the LES grid (index = integer wavenumber)."""
+    n_grid = cfg.dg.n_dof_dir
+    _, n_shells, _ = _shell_bins(n_grid)
+    k = np.arange(n_shells, dtype=np.float64)
+    return vkp_spectrum(k, cfg.u_rms, cfg.k_peak, cfg.k_eta)
+
+
+def les_spectrum(u: jax.Array, cfg: HITConfig) -> jax.Array:
+    """Instantaneous E_LES(k) from a conservative nodal state."""
+    _, vel, _, _ = conservative_to_primitive(u)
+    vel_uniform = nodal_to_uniform(vel, cfg.dg)
+    return energy_spectrum(vel_uniform)
+
+
+def spectral_error(e_les: jax.Array, e_dns: jax.Array, k_max: int) -> jax.Array:
+    """Paper Eq. (4): mean relative squared spectrum error over k in [1, k_max]."""
+    sl = slice(1, k_max + 1)
+    rel = (e_dns[..., sl] - e_les[..., sl]) / e_dns[..., sl]
+    return jnp.mean(rel**2, axis=-1)
+
+
+def reward_from_error(ell: jax.Array, alpha: float) -> jax.Array:
+    """Paper Eq. (5) (sign-corrected, see DESIGN.md): r = 2 exp(-l/alpha) - 1."""
+    return 2.0 * jnp.exp(-ell / alpha) - 1.0

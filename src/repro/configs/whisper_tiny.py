@@ -1,0 +1,44 @@
+"""whisper-tiny [audio] — encoder-decoder speech backbone.
+
+arXiv:2212.04356 (unverified tier).  4 encoder + 4 decoder layers,
+d_model 384, 6 heads (kv=6, head_dim 64), d_ff 1536 (GELU MLP),
+vocab 51865, LayerNorm + biases, learned positions, tied decoder head.
+
+The conv1d audio frontend is a STUB per the brief: `input_specs()` supplies
+precomputed frame embeddings (B, 1500, 384).  The decode_32k / train_4k
+decoder lengths are mechanical per the assigned shape set (the released
+model decodes <= 448 positions); the learned decoder position table is
+sized to the largest assigned cell.
+"""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,            # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    n_heads=6,
+    kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    head_dim=64,
+    mixer="attn",
+    ffn="gelu_mlp",
+    norm="layernorm",
+    attn_bias=True,
+    mlp_bias=True,
+    tie_embeddings=True,
+    rope=False,
+    max_source_positions=1500,
+    max_positions=32768,
+)
+
+
+def reduced() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, encoder_layers=2, d_model=64, n_heads=4,
+        kv_heads=4, head_dim=16, d_ff=128, vocab=479,
+        max_source_positions=24, max_positions=128,
+        loss_chunk=32, attn_block_k=32)

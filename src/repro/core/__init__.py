@@ -1,0 +1,23 @@
+"""The paper's primary contribution: scalable synchronous RL-CFD coupling.
+
+  policy        Table-2 Conv3D Gaussian policy (+ critic)
+  ppo           clip-PPO with GAE (paper hyperparameters)
+  rollout       sharded synchronous fleet rollout (SmartSim-loop analog)
+  orchestrator  env-fleet placement, state bank, jitted fleet programs
+  runner        fault-tolerant training loop (checkpoint/restart/replay)
+  checkpoints   atomic versioned integrity-checked checkpoints
+  compression   compressed / chunked cross-pod gradient reduction
+  elastic       mesh-shape-changing restarts, elastic fleet sizing
+"""
+from . import checkpoints, compression, elastic, orchestrator, policy, ppo, rollout, runner
+
+__all__ = [
+    "checkpoints",
+    "compression",
+    "elastic",
+    "orchestrator",
+    "policy",
+    "ppo",
+    "rollout",
+    "runner",
+]

@@ -1,0 +1,105 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Within a pod, gradient reduction rides the ICI fabric and is cheap relative
+to compute; *between* pods it crosses the data-center network, which is an
+order of magnitude slower.  The classic mitigation is to compress only the
+slow-axis reduction:
+
+    grads --psum(ici axes)--> pod-local sum --compress--> psum(pod axis)
+          --decompress--> update
+
+Two codecs are provided:
+  * bf16    : 2x volume, unbiased-ish truncation (round-to-nearest-even)
+  * int8    : 4x volume, per-leaf absmax scaling + ERROR FEEDBACK — the
+              quantization residual is carried to the next iteration, which
+              keeps SGD/Adam convergence intact (Seide et al. 2014; Karimireddy
+              et al. 2019).
+
+All functions are shard_map-friendly: `compressed_psum` must be called inside
+a shard_map (or pmapped) context where `axis_name` is bound.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(
+    tree: Any,
+    axis_name: str,
+    *,
+    method: str = "bf16",
+    error_state: Any = None,
+) -> tuple[Any, Any]:
+    """All-reduce `tree` over `axis_name` with on-the-wire compression.
+
+    Returns (reduced_tree_f32, new_error_state).  `error_state` (same
+    structure, f32) carries the int8 quantization residuals between calls;
+    pass None to start from zero (also valid for bf16/none, where it stays
+    None).
+    """
+    if method == "none":
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), tree), None
+
+    if method == "bf16":
+        def red(g):
+            g16 = g.astype(jnp.bfloat16)
+            return jax.lax.psum(g16, axis_name).astype(jnp.float32)
+
+        return jax.tree.map(red, tree), None
+
+    if method == "int8":
+        if error_state is None:
+            error_state = jax.tree.map(
+                lambda g: jnp.zeros_like(g, dtype=jnp.float32), tree)
+
+        def red(g, err):
+            g = g.astype(jnp.float32) + err
+            q, scale = _quantize_int8(g)
+            residual = g - _dequantize_int8(q, scale)
+            # int8 sums overflow; widen to int32 on the wire-equivalent psum.
+            # (XLA transfers the widened type; the 4x volume claim holds for a
+            # real wire codec — we model the *numerics* here and account the
+            # traffic analytically in benchmarks/roofline.py.)
+            total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            scale_sum = jax.lax.pmax(scale, axis_name)  # shared conservative scale
+            return total.astype(jnp.float32) * scale_sum, residual
+
+        flat, tdef = jax.tree.flatten(tree)
+        errs = jax.tree.leaves(error_state)
+        outs = [red(g, e) for g, e in zip(flat, errs)]
+        reduced = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_err = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return reduced, new_err
+
+    raise ValueError(f"unknown compression method: {method}")
+
+
+def chunked_psum(tree: Any, axis_name: str, *, n_chunks: int = 4) -> Any:
+    """Split each leaf into chunks and psum them independently.
+
+    XLA schedules independent collectives concurrently with surrounding
+    compute — chunking exposes the overlap window (the 'interleaved gradient
+    reduction' trick; see EXPERIMENTS.md §Perf).
+    """
+    def red(g):
+        flat = g.reshape(-1)
+        pad = (-flat.shape[0]) % n_chunks
+        flat = jnp.pad(flat, (0, pad))
+        chunks = jnp.split(flat, n_chunks)
+        out = jnp.concatenate([jax.lax.psum(c, axis_name) for c in chunks])
+        return out[: g.size].reshape(g.shape)
+
+    return jax.tree.map(red, tree)

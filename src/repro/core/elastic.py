@@ -1,0 +1,61 @@
+"""Elastic restart: resume a checkpoint on a *different* mesh / fleet size.
+
+The paper's framework is tied to its batch allocation (N nodes reserved for
+the whole training run).  On cloud TPU pods, slices get preempted and
+re-materialize at different sizes — so checkpoint restore must tolerate a
+mesh-shape change.  Two layers:
+
+  * `reshard`      : host-roundtrip-free re-placement of a pytree onto a new
+                     mesh given PartitionSpecs (falls back to host transfer
+                     when source and target topologies are incompatible).
+  * `elastic_fleet`: adjust the environment-fleet size between iterations.
+    PPO is on-policy — experience never outlives an iteration — so fleet
+    size is a *free* elastic knob: shrinking/growing n_envs only changes the
+    gradient-estimator variance (paper Sec. 6.2), never correctness.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def reshard(tree: Any, mesh: Mesh, specs: Any) -> Any:
+    """Place `tree` on `mesh` with `specs` (a pytree of PartitionSpec or a
+    single spec broadcast to all leaves)."""
+    if isinstance(specs, PartitionSpec):
+        specs = jax.tree.map(lambda _: specs, tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs
+    )
+
+
+def validate_divisibility(shape: tuple[int, ...], spec: PartitionSpec,
+                          mesh: Mesh) -> bool:
+    """True iff every sharded dim of `shape` divides its mesh-axis product."""
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            continue
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % total:
+            return False
+    return True
+
+
+def elastic_fleet(n_envs_ckpt: int, mesh: Mesh | None,
+                  env_axes: tuple[str, ...] = ("data",)) -> int:
+    """Fleet size to run on the *current* mesh, given the checkpointed one.
+
+    Keeps the per-shard env count of the checkpointed run when possible,
+    otherwise rounds the fleet to a multiple of the env-shard count.  Returns
+    the adjusted n_envs (== n_envs_ckpt when the mesh still divides it).
+    """
+    if mesh is None:
+        return n_envs_ckpt
+    shards = int(np.prod([mesh.shape[a] for a in env_axes]))
+    if n_envs_ckpt % shards == 0:
+        return n_envs_ckpt
+    return max(1, round(n_envs_ckpt / shards)) * shards

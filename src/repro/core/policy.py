@@ -1,0 +1,135 @@
+"""The paper's policy network (Table 2): a per-element Conv3D stack.
+
+Input : per-element nodal velocities (..., E, n, n, n, 3) with E = K^3.
+Output: Gaussian policy over the per-element Smagorinsky coefficient,
+        mean = cs_max * sigmoid(conv(x)) in [0, cs_max], state-independent
+        learnable log-std (TF-Agents' default for continuous PPO).
+
+For N=5 (n=6) the stack reproduces Table 2 exactly (3,293 parameters):
+
+    Conv3D k3 f8 zero-pad -> 6^3 x 8   ReLU
+    Conv3D k3 f8 no-pad   -> 4^3 x 8   ReLU
+    Conv3D k3 f4 no-pad   -> 2^3 x 4   ReLU
+    Conv3D k2 f1 no-pad   -> 1^3 x 1
+    Scale  y = cs_max * sigmoid(x)
+
+For other n the same pattern generalizes: one zero-padded k3 layer, k3
+valid layers (filters 8, then 4) until the spatial size reaches 2, and a
+final k2 valid layer to 1.
+
+The critic is an identical (separately parameterized) trunk producing a
+per-element scalar, averaged over elements — the state value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    n_nodes: int = 6          # GLL nodes per direction = N+1
+    channels: int = 3         # velocity components
+    cs_max: float = 0.5
+    log_std_init: float = -1.6  # std ~ 0.2 in sigmoid-space
+
+
+def _conv_plan(n: int) -> list[tuple[int, int, str]]:
+    """[(kernel, filters, padding)] reducing spatial size n -> 1."""
+    plan: list[tuple[int, int, str]] = [(3, 8, "SAME")]
+    size = n
+    n_valid = max((size - 2 + 1) // 2, 0)  # k3-VALID layers until size <= 2
+    for i in range(n_valid):
+        f = 4 if i == n_valid - 1 else 8  # Table 2: ..., 8, 4, then k2 f1
+        plan.append((3, f, "VALID"))
+        size -= 2
+    # size is now 2 (n even) or 3->... n odd handled: if size==3 a k3 valid
+    # layer above would have taken it to 1 already; guard both endings.
+    if size == 2:
+        plan.append((2, 1, "VALID"))
+    else:  # size == 1 after the loop (odd n): make last layer emit 1 filter
+        k, _, pad = plan.pop()
+        plan.append((k, 1, pad))
+    return plan
+
+
+def _trunk_init(key: jax.Array, cfg: PolicyConfig) -> list[dict]:
+    plan = _conv_plan(cfg.n_nodes)
+    keys = jax.random.split(key, len(plan))
+    params = []
+    c_in = cfg.channels
+    for k_layer, (ksize, f, _pad) in zip(keys, plan):
+        params.append(nn.conv3d_init(k_layer, ksize, c_in, f))
+        c_in = f
+    return params
+
+
+def _trunk_apply(params: list[dict], cfg: PolicyConfig, obs: jax.Array) -> jax.Array:
+    """obs (..., E, n, n, n, C) -> per-element scalar (..., E)."""
+    plan = _conv_plan(cfg.n_nodes)
+    x = obs
+    for i, (p, (_k, _f, pad)) in enumerate(zip(params, plan)):
+        x = nn.conv3d(p, x, padding=pad)
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x[..., 0, 0, 0, 0]  # spatial reduced to 1, single filter
+
+
+def init(key: jax.Array, cfg: PolicyConfig) -> dict:
+    ka, kc = jax.random.split(key)
+    return {
+        "actor": _trunk_init(ka, cfg),
+        "log_std": jnp.full((), cfg.log_std_init, jnp.float32),
+        "critic": _trunk_init(kc, cfg),
+    }
+
+
+def actor_mean(params: dict, cfg: PolicyConfig, obs: jax.Array) -> jax.Array:
+    """Mean action per element, in [0, cs_max]."""
+    logits = _trunk_apply(params["actor"], cfg, obs)
+    return cfg.cs_max * jax.nn.sigmoid(logits)
+
+
+def value(params: dict, cfg: PolicyConfig, obs: jax.Array) -> jax.Array:
+    """State value: mean of the per-element critic outputs (..., E) -> (...)."""
+    return jnp.mean(_trunk_apply(params["critic"], cfg, obs), axis=-1)
+
+
+def distribution(params: dict, cfg: PolicyConfig, obs: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(mean, std) of the per-element Gaussian action distribution."""
+    mean = actor_mean(params, cfg, obs)
+    std = jnp.exp(params["log_std"]).astype(mean.dtype)
+    return mean, jnp.broadcast_to(std, mean.shape)
+
+
+def log_prob(mean: jax.Array, std: jax.Array, action: jax.Array) -> jax.Array:
+    """Joint log-density of the element-wise independent Gaussian (sum over E)."""
+    z = (action - mean) / std
+    per_elem = -0.5 * z * z - jnp.log(std) - 0.5 * math.log(2.0 * math.pi)
+    return jnp.sum(per_elem, axis=-1)
+
+
+def entropy(std: jax.Array) -> jax.Array:
+    """Joint entropy (sum over the element axis)."""
+    per_elem = 0.5 * math.log(2.0 * math.pi * math.e) + jnp.log(std)
+    return jnp.sum(per_elem, axis=-1)
+
+
+def sample_action(key: jax.Array, params: dict, cfg: PolicyConfig,
+                  obs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Draw a ~ N(mean, std); returns (action, log_prob)."""
+    mean, std = distribution(params, cfg, obs)
+    noise = jax.random.normal(key, mean.shape, mean.dtype)
+    action = mean + std * noise
+    return action, log_prob(mean, std, action)
+
+
+def param_count(params: dict) -> int:
+    return nn.param_count(params["actor"]) + 1  # actor + log_std (Table 2 scope)

@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic streams for the LM cells and
+episode initial states for the RL-CFD cells (see cfd/initial.py)."""
+from .synthetic import TokenStream, lm_batch, make_batch_for
+
+__all__ = ["TokenStream", "lm_batch", "make_batch_for"]

@@ -1,0 +1,79 @@
+"""Deterministic synthetic data pipeline for the LM cells.
+
+A production run would stream tokenized shards; offline we generate a
+reproducible Zipf-ish token stream whose cursor is part of the checkpoint
+(fault-tolerant resume replays the exact same batches).  Modality frontends
+are stubs per the brief: `make_batch_for` attaches precomputed patch/frame
+embeddings for the vlm/audio architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ArchConfig
+
+
+def _zipf_tokens(rng: np.random.Generator, shape: tuple[int, ...], vocab: int
+                 ) -> np.ndarray:
+    """Zipf(1.2)-distributed token ids in [0, vocab) — a crude natural-text
+    frequency profile so losses have realistic magnitude/structure."""
+    z = rng.zipf(1.2, size=shape).astype(np.int64)
+    return (z % vocab).astype(np.int32)
+
+
+def lm_batch(seed: int, batch: int, seq: int, vocab: int) -> dict:
+    """One (tokens, labels) next-token batch."""
+    rng = np.random.default_rng(seed)
+    stream = _zipf_tokens(rng, (batch, seq + 1), vocab)
+    return {
+        "tokens": jnp.asarray(stream[:, :-1]),
+        "labels": jnp.asarray(stream[:, 1:]),
+    }
+
+
+def make_batch_for(cfg: ArchConfig, seed: int, batch: int, seq: int) -> dict:
+    """Cell-shaped batch for `cfg` including stub modality inputs."""
+    if cfg.is_encdec:  # whisper: frames are the stub conv-frontend output
+        rng = np.random.default_rng(seed)
+        out = lm_batch(seed, batch, seq, cfg.vocab)
+        out["frames"] = jnp.asarray(
+            rng.standard_normal(
+                (batch, cfg.max_source_positions, cfg.d_model),
+                dtype=np.float32))
+        return out
+    if cfg.vision_dim:  # llava: anyres patch embeddings, text fills the rest
+        text = max(seq - cfg.vision_tokens, 8)
+        rng = np.random.default_rng(seed)
+        out = lm_batch(seed, batch, text, cfg.vocab)
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.vision_tokens, cfg.vision_dim),
+                                dtype=np.float32))
+        return out
+    return lm_batch(seed, batch, seq, cfg.vocab)
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Checkpointable deterministic batch iterator."""
+
+    cfg: ArchConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    cursor: int = 0
+
+    def next(self) -> dict:
+        b = make_batch_for(self.cfg, self.seed + self.cursor, self.batch,
+                           self.seq)
+        self.cursor += 1
+        return b
+
+    def state_dict(self) -> dict:
+        return {"seed": self.seed, "cursor": self.cursor}
+
+    def load_state_dict(self, s: dict) -> None:
+        self.seed, self.cursor = int(s["seed"]), int(s["cursor"])

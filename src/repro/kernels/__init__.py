@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  dg_derivative    fused 3-direction DGSEM derivative (solver volume terms)
+  smagorinsky      fused strain-rate -> eddy-viscosity chain (paper Eq. 3)
+  flash_attention  blockwise-softmax attention (GQA/causal/SWA/softcap)
+  linear_scan      chunk-parallel gated linear recurrence (RWKV6/SSM)
+
+Use through `ops` (impl dispatch + autodiff glue); `ref` holds the pure-jnp
+oracles every kernel is validated against (tests/test_kernels.py).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

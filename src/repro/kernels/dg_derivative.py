@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused three-direction DGSEM derivative.
+
+The DGSEM volume term applies the (n x n) Lagrange derivative matrix D along
+each of the three intra-element node axes of every element — three tiny
+contractions over a huge element batch (the solver's dominant FLOP term,
+paper Sec. 3.2 / FLEXI).
+
+Arithmetic intensity per point is low (3n MACs vs 4 channel floats moved),
+so the win on TPU is HBM traffic, not MXU utilization: computing all three
+directions in ONE pass over u reads u once instead of three times
+(16 B/point moved instead of 24 B/point -> 1.5x less traffic on the
+memory-bound term; see EXPERIMENTS.md §Perf).
+
+Layout: u is flattened to (B, n, n, n, C) with B = batch * K^3 elements.
+Each grid step processes a block of `block_b` elements held in VMEM; the
+three contractions are MXU matmuls over reshaped views:
+
+    d0 : (n, n) @ (B_blk, n, [n n C])   contracting node axis 0
+    d1 : per-i0 (n, n) @ (..., n, [n C])
+    d2 : (..., [n n], n, C) with D applied on the third node axis
+
+D lives in VMEM as a whole (n <= 16: at most 1 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, d_ref, du0_ref, du1_ref, du2_ref):
+    u = u_ref[...]  # (Bb, n, n, n, C)
+    d = d_ref[...]  # (n, n)
+    bb, n, _, _, c = u.shape
+    f32 = jnp.float32
+    u32 = u.astype(f32)
+    d32 = d.astype(f32)
+
+    # direction 0: contract first node axis -> (i <- m): D[i,m] u[b,m,j,k,c]
+    u_m = u32.reshape(bb, n, n * n * c)             # (Bb, m, X)
+    du0 = jnp.einsum("im,bmx->bix", d32, u_m)
+    du0_ref[...] = du0.reshape(u.shape).astype(u.dtype)
+
+    # direction 1: contract second node axis
+    u_m = u32.reshape(bb * n, n, n * c)             # (Bb*i0, m, X)
+    du1 = jnp.einsum("jm,bmx->bjx", d32, u_m)
+    du1_ref[...] = du1.reshape(u.shape).astype(u.dtype)
+
+    # direction 2: contract third node axis
+    u_m = u32.reshape(bb * n * n, n, c)             # (Bb*i0*i1, m, C)
+    du2 = jnp.einsum("km,bmc->bkc", d32, u_m)
+    du2_ref[...] = du2.reshape(u.shape).astype(u.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def dg_derivative3(
+    u: jax.Array,
+    d_matrix: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused (du/dxi_0, du/dxi_1, du/dxi_2) for an element batch.
+
+    u: (B, n, n, n, C);  d_matrix: (n, n).  Matches kernels.ref.dg_derivative3.
+    """
+    b, n, _, _, c = u.shape
+    block_b = min(block_b, b)
+    pad = (-b) % block_b
+    u_p = jnp.pad(u, ((0, pad),) + ((0, 0),) * 4) if pad else u
+    bp = b + pad
+    grid = (bp // block_b,)
+    blk = (block_b, n, n, n, c)
+    spec = pl.BlockSpec(blk, lambda i: (i, 0, 0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((bp, n, n, n, c), u.dtype)
+    du0, du1, du2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=[spec, spec, spec],
+        out_shape=[out_shape] * 3,
+        interpret=interpret,
+        name="dg_derivative3",
+    )(u_p, d_matrix)
+    if pad:
+        du0, du1, du2 = du0[:b], du1[:b], du2[:b]
+    return du0, du1, du2

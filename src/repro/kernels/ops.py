@@ -1,0 +1,150 @@
+"""Public kernel API: impl dispatch + differentiation glue.
+
+Every op takes `impl`:
+  "kernel"     Pallas kernel, interpret=True off-TPU (tests, CPU container),
+               compiled on TPU.  Gradients: custom_vjp with recompute-from-ref
+               backward (fwd speed where it matters; bwd correctness from the
+               oracle — the backward kernels are listed as future work in
+               DESIGN.md §Kernels).
+  "chunked"    pure-jnp flash/chunk-equivalent (differentiable end-to-end,
+               compilable on every backend) — the dry-run / training path.
+  "naive"      full-materialization reference — tests and tiny shapes only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dg_derivative import dg_derivative3 as _dg_pallas
+from .flash_attention import flash_attention as _fa_pallas
+from .linear_scan import linear_scan as _ls_pallas
+from .smagorinsky import smagorinsky_nut as _smag_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --- dg derivative -----------------------------------------------------------
+def dg_derivative3(u: jax.Array, d_matrix: jax.Array, *, impl: str = "kernel",
+                   block_b: int = 256) -> tuple[jax.Array, ...]:
+    if impl == "kernel":
+        return _dg_pallas(u, d_matrix, block_b=block_b, interpret=not _on_tpu())
+    return ref.dg_derivative3(u, d_matrix)
+
+
+# --- smagorinsky -------------------------------------------------------------
+def smagorinsky_nut(grad_v: jax.Array, cs: jax.Array, delta: float, *,
+                    impl: str = "kernel", block_p: int = 2048) -> jax.Array:
+    if impl == "kernel":
+        return _smag_pallas(grad_v, cs, delta, block_p=block_p,
+                            interpret=not _on_tpu())
+    return ref.smagorinsky_nut(grad_v, cs, delta)
+
+
+# --- flash attention ---------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fa_with_vjp(q, k, v, causal, window, softcap, scale):
+    return _fa_pallas(q, k, v, causal=causal, window=window, softcap=softcap,
+                      scale=scale, interpret=not _on_tpu())
+
+
+def _fa_fwd(q, k, v, causal, window, softcap, scale):
+    return _fa_with_vjp(q, k, v, causal, window, softcap, scale), (q, k, v)
+
+
+def _fa_bwd(causal, window, softcap, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.mha_chunked(q, k, v, causal=causal, window=window,
+                                        softcap=softcap, scale=scale), q, k, v)
+    return vjp(g)
+
+
+_fa_with_vjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    impl: str = "chunked",
+    block_k: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """GQA attention, q (B,Hq,Sq,D), kv (B,Hkv,Skv,D) -> (B,Hq,Sq,D)."""
+    if impl == "kernel":
+        return _fa_with_vjp(q, k, v, causal, window, softcap, scale)
+    if impl == "chunked":
+        return ref.mha_chunked(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               block_k=min(block_k, k.shape[2]),
+                               unroll=unroll)
+    if impl == "naive":
+        return ref.mha(q, k, v, causal=causal, window=window, softcap=softcap,
+                       scale=scale)
+    raise ValueError(f"unknown attention impl: {impl}")
+
+
+# --- gated linear recurrence ---------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _ls_with_vjp(q, k, v, w, u, s0, decay_before_read):
+    return _ls_pallas(q, k, v, w, u, s0, decay_before_read=decay_before_read,
+                      interpret=not _on_tpu())
+
+
+def _ls_fwd(q, k, v, w, u, s0, decay_before_read):
+    return _ls_with_vjp(q, k, v, w, u, s0, decay_before_read), (q, k, v, w, u, s0)
+
+
+def _ls_bwd(decay_before_read, res, g):
+    q, k, v, w, u, s0 = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.linear_scan_chunked(*a, decay_before_read=decay_before_read),
+        q, k, v, w, u, s0)
+    return vjp(g)
+
+
+_ls_with_vjp.defvjp(_ls_fwd, _ls_bwd)
+
+
+def gated_linear_scan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array | None = None,
+    s0: jax.Array | None = None,
+    *,
+    decay_before_read: bool = False,
+    impl: str = "chunked",
+    chunk: int = 64,
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(o, s_final) of the gated linear recurrence (see ref.linear_scan)."""
+    if impl == "kernel":
+        if u is None or s0 is None:  # custom_vjp wants concrete args
+            b, _, dk = q.shape
+            u = jnp.zeros((dk,), q.dtype) if u is None else u
+            s0 = jnp.zeros((b, dk, v.shape[-1]), jnp.float32) if s0 is None else s0
+        return _ls_with_vjp(q, k, v, w, u, s0, decay_before_read)
+    if impl == "chunked":
+        if unroll:  # cap the unrolled body count (dry-run calibration);
+            # inflates only the tiny intra-chunk term (DESIGN.md §5b)
+            chunk = max(chunk, q.shape[1] // 16)
+        return ref.linear_scan_chunked(q, k, v, w, u, s0,
+                                       decay_before_read=decay_before_read,
+                                       chunk=chunk, unroll=unroll)
+    if impl == "scan":
+        return ref.linear_scan(q, k, v, w, u, s0,
+                               decay_before_read=decay_before_read)
+    raise ValueError(f"unknown linear-scan impl: {impl}")

@@ -1,0 +1,273 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *semantic contracts*: tests sweep shapes/dtypes and assert
+allclose(kernel(interpret=True), ref).  They are also the implementations
+used on non-TPU backends and inside the multi-pod dry-run (Pallas lowers for
+TPU; the CPU dry-run must still produce a compilable, cost-analyzable HLO,
+and the chunked/flash reference forms below have the same asymptotic
+FLOP/byte behavior as the kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- dg_derivative -----------------------------------------------------------
+def dg_derivative3(u: jax.Array, d_matrix: jax.Array) -> tuple[jax.Array, ...]:
+    """Fused 3-direction DGSEM derivative.
+
+    u: (B, n, n, n, C) element batch; d_matrix: (n, n).
+    Returns (du0, du1, du2) with du_d = derivative along intra-element axis d.
+    """
+    du0 = jnp.einsum("im,bmjkc->bijkc", d_matrix, u)
+    du1 = jnp.einsum("jm,bimkc->bijkc", d_matrix, u)
+    du2 = jnp.einsum("km,bijmc->bijkc", d_matrix, u)
+    return du0, du1, du2
+
+
+# --- smagorinsky -------------------------------------------------------------
+def smagorinsky_nut(grad_v: jax.Array, cs: jax.Array, delta: float) -> jax.Array:
+    """Fused strain-rate -> eddy-viscosity chain (paper Eq. 3).
+
+    grad_v: (P, 3, 3) with grad_v[p, i, j] = d v_i / d x_j at point p.
+    cs:     (P,) per-point Smagorinsky coefficient (element value broadcast).
+    Returns nu_t: (P,) = (cs * delta)^2 * sqrt(2 S_ij S_ij).
+    """
+    s = 0.5 * (grad_v + jnp.swapaxes(grad_v, -1, -2))
+    s_mag = jnp.sqrt(2.0 * jnp.sum(s * s, axis=(-1, -2)) + 1e-30)
+    return (cs * delta) ** 2 * s_mag
+
+
+# --- flash attention ---------------------------------------------------------
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive full-materialization GQA attention — the flash kernel's oracle.
+
+    q: (B, Hq, Sq, D);  k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    `window`: sliding-window size w — position i attends to [i-w+1, i]
+    (count includes self), applied on ABSOLUTE positions assuming q occupies
+    the last Sq positions of the Skv-long context (decode convention).
+    `softcap`: gemma-2 logit soft-capping cap*tanh(x/cap).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kg = jnp.repeat(k, group, axis=1)
+    vg = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)  # absolute q positions
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    weights = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", weights, vg.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mha_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_k: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Flash-equivalent chunked attention in pure jnp (lax.scan over KV
+    blocks, online softmax).  O(Sq * D) memory — the dry-run/TPU-free form
+    with the same FLOP count and HBM traffic shape as the Pallas kernel."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    n_blocks = -(-skv // block_k)
+    pad = n_blocks * block_k - skv
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kp.reshape(b, hkv, n_blocks, block_k, d)
+    vb = vp.reshape(b, hkv, n_blocks, block_k, d)
+
+    q32 = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq) + (skv - sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_blk, v_blk, start = blk  # (B, Hkv, bk, D), scalar
+        k_blk = jnp.repeat(k_blk, group, axis=1).astype(jnp.float32)
+        v_blk = jnp.repeat(v_blk, group, axis=1).astype(jnp.float32)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q32, k_blk) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = start + jnp.arange(block_k)
+        mask = k_pos[None, :] < skv
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # guard: rows with no valid key yet keep m=-inf -> exp(0)=1 row sums
+        alpha = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m - m_new))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[..., None] * acc + jnp.einsum("bhqk,bhkd->bhqd", p, v_blk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    starts = jnp.arange(n_blocks) * block_k
+    if unroll:  # dry-run calibration: no while loop in the HLO
+        carry = (m0, l0, acc0)
+        for i in range(n_blocks):
+            carry, _ = body(carry, (kb[:, :, i], vb[:, :, i], starts[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, acc0),
+            (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), starts),
+        )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# --- gated linear recurrence (RWKV6 / SSM family) -----------------------------
+def linear_scan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array | None = None,
+    s0: jax.Array | None = None,
+    *,
+    decay_before_read: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact sequential gated linear recurrence — the chunked kernel's oracle.
+
+    Shapes: q, k, w: (B, T, dk);  v: (B, T, dv);  u: (dk,) or None;
+    s0: (B, dk, dv) initial state or None.
+
+    decay_before_read=False  (RWKV6):
+        o_t = q_t @ (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    decay_before_read=True   (GLA / Mamba-like):
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+        o_t = q_t @ S_t
+
+    Returns (o: (B, T, dv), s_final: (B, dk, dv)).  All math in f32.
+    """
+    b, t, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    q, k, v, w = (x.astype(f32) for x in (q, k, v, w))
+    s0 = jnp.zeros((b, dk, dv), f32) if s0 is None else s0.astype(f32)
+
+    def step(s, xs):
+        qt, kt, vt, wt = xs  # (B, dk), (B, dk), (B, dv), (B, dk)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, dk, dv)
+        if decay_before_read:
+            s_new = wt[..., :, None] * s + kv
+            o = jnp.einsum("bk,bkv->bv", qt, s_new)
+        else:
+            read = s + (u[None, :, None] * kv if u is not None else kv)
+            o = jnp.einsum("bk,bkv->bv", qt, read)
+            s_new = wt[..., :, None] * s + kv
+        return s_new, o
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (q, k, v, w))
+    s_final, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1), s_final
+
+
+def linear_scan_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array | None = None,
+    s0: jax.Array | None = None,
+    *,
+    decay_before_read: bool = False,
+    chunk: int = 64,
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel form of `linear_scan` in pure jnp (lax.scan over
+    chunks, dense intra-chunk math) — the exact algorithm of the Pallas
+    kernel, usable on any backend and fully differentiable.  This is the
+    implementation the models use for training and the dry-run."""
+    b, t, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    q, k, v, w = (x.astype(f32) for x in (q, k, v, w))
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    tp = t + pad
+    nc = tp // chunk
+    qc, kc, vc, wc = (x.reshape(b, nc, chunk, -1).swapaxes(0, 1)
+                      for x in (q, k, v, w))
+    s_init = jnp.zeros((b, dk, dv), f32) if s0 is None else s0.astype(f32)
+    mask = (jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+            if decay_before_read
+            else jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1))
+
+    def body(s, xs):
+        qb, kb, vb, wb = xs  # (B, C, d*)
+        cw = jnp.cumsum(jnp.log(jnp.maximum(wb, 1e-30)), axis=1)
+        if decay_before_read:
+            q_decay = jnp.exp(cw)
+            pair = cw[:, :, None, :] - cw[:, None, :, :]
+        else:
+            cw_prev = jnp.concatenate([jnp.zeros_like(cw[:, :1]), cw[:, :-1]],
+                                      axis=1)
+            q_decay = jnp.exp(cw_prev)
+            pair = cw_prev[:, :, None, :] - cw[:, None, :, :]
+        pair = jnp.where(mask[None, :, :, None], pair, -jnp.inf)
+        a = jnp.einsum("btd,bsd,btsd->bts", qb, kb, jnp.exp(pair))
+        if not decay_before_read:
+            diag = jnp.sum(qb * (u[None, None, :] * kb if u is not None else kb),
+                           axis=-1)
+            a = a + diag[:, :, None] * jnp.eye(chunk, dtype=f32)[None]
+        o = jnp.einsum("bts,bsv->btv", a, vb) + jnp.einsum(
+            "btk,bkv->btv", qb * q_decay, s)
+        k_decay = jnp.exp(cw[:, -1:, :] - cw)
+        s_new = jnp.exp(cw[:, -1])[..., None] * s + jnp.einsum(
+            "btk,btv->bkv", kb * k_decay, vb)
+        return s_new, o
+
+    if unroll:  # dry-run calibration: no while loop in the HLO
+        s_final = s_init
+        outs = []
+        for i in range(nc):
+            s_final, o_i = body(s_final, (qc[i], kc[i], vc[i], wc[i]))
+            outs.append(o_i)
+        o = jnp.stack(outs, axis=0)
+    else:
+        s_final, o = jax.lax.scan(body, s_init, (qc, kc, vc, wc))
+    o = o.swapaxes(0, 1).reshape(b, tp, dv)
+    return o[:, :t], s_final

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused Smagorinsky eddy-viscosity chain (paper Eq. 3).
+
+    S_ij  = (grad_v + grad_v^T) / 2
+    |S|   = sqrt(2 S_ij S_ij)
+    nu_t  = (C_s * Delta)^2 |S|
+
+The chain is purely elementwise over solution points and is memory-bound;
+unfused, XLA materializes S_ij (9 floats/point) and |S| between HBM round
+trips on the viscous path.  The fused kernel reads the 9 gradient components
+and one C_s per point and writes a single nu_t: 40 B/point (10 in + 1 out
+won't fit better) versus ~88 B/point unfused — a 2.2x traffic cut on this
+link of the RHS (EXPERIMENTS.md §Perf).
+
+Layout: point-flattened (P, 9) gradients (row-major i, j of dv_i/dx_j),
+(P,) coefficients; grid over P blocks; Delta is a compile-time constant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(grad_ref, cs_ref, nut_ref, *, delta: float):
+    g = grad_ref[...].astype(jnp.float32)  # (Pb, 9): dv_i/dx_j row-major
+    cs = cs_ref[...].astype(jnp.float32)   # (Pb,)
+    # 2 * S_ij S_ij = 2 * sum_ij ((g_ij + g_ji)/2)^2
+    #              = sum_ij g_ij^2 + g_ij g_ji   (expanded, no transpose mat)
+    g2 = jnp.sum(g * g, axis=-1)
+    # cross terms g_ij * g_ji: pairs (0,1)-(1,0)=(1,3), (0,2)-(2,0)=(2,6),
+    # (1,2)-(2,1)=(5,7); diagonals pair with themselves.
+    cross = (
+        g[:, 0] * g[:, 0] + g[:, 4] * g[:, 4] + g[:, 8] * g[:, 8]
+        + 2.0 * (g[:, 1] * g[:, 3] + g[:, 2] * g[:, 6] + g[:, 5] * g[:, 7])
+    )
+    s_mag = jnp.sqrt(g2 + cross + 1e-30)
+    nut = (cs * delta) ** 2 * s_mag
+    nut_ref[...] = nut.astype(nut_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "block_p", "interpret"))
+def smagorinsky_nut(
+    grad_v: jax.Array,
+    cs: jax.Array,
+    delta: float,
+    *,
+    block_p: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """nu_t for point-flattened inputs; matches kernels.ref.smagorinsky_nut.
+
+    grad_v: (P, 3, 3);  cs: (P,).  Returns (P,).
+    """
+    p = grad_v.shape[0]
+    g = grad_v.reshape(p, 9)
+    block_p = min(block_p, p)
+    pad = (-p) % block_p
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        cs = jnp.pad(cs, (0, pad))
+    pp = p + pad
+    nut = pl.pallas_call(
+        functools.partial(_kernel, delta=delta),
+        grid=(pp // block_p,),
+        in_specs=[
+            pl.BlockSpec((block_p, 9), lambda i: (i, 0)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), grad_v.dtype),
+        interpret=interpret,
+        name="smagorinsky_nut",
+    )(g, cs)
+    return nut[:p] if pad else nut

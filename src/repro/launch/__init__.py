@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, AOT dry-run, training/serving drivers."""

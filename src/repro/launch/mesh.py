@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax use,
+and everything else must see the real (single) device.
+
+Topology: TPU v5e, 256 chips/pod (16x16 ICI torus), 2 pods over DCN.
+  single pod : (data=16, model=16)
+  multi pod  : (pod=2, data=16, model=16)
+
+The `pod` axis is the slow (DCN) axis: only data parallelism (env batches /
+LM batches) and gradient reduction cross it (core/compression.py compresses
+that hop).  `model` is the fast ICI axis used for tensor/expert/sequence
+parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a (data, model) mesh — tests / examples."""
+    n = len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# Hardware constants for the roofline terms (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per-chip injection)
+DCN_BW = 6.25e9                 # bytes/s per chip cross-pod (50 Gb/s)

@@ -1,0 +1,184 @@
+"""Abstract input specs + shardings for every (arch × shape) dry-run cell.
+
+Everything here is ShapeDtypeStruct-based: no device allocation ever happens
+(the 27B/35B cells would not fit host RAM).  The same shardings drive the
+real launcher (train.py / serve.py) via `jax.device_put`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..configs.shapes import ShapeConfig
+from ..models import api
+from ..models.config import ArchConfig
+from ..parallel import sharding as shd
+
+
+def rules_for(mesh: Mesh, overrides: dict | None = None) -> shd.AxisRules:
+    return shd.AxisRules(mesh, overrides)
+
+
+def _spec_tree(abstract: Any, axes: Any, rules: shd.AxisRules) -> Any:
+    return shd.param_specs(abstract, axes, rules)
+
+
+def _shardings(abstract: Any, axes: Any, mesh: Mesh,
+               rules: shd.AxisRules) -> Any:
+    specs = _spec_tree(abstract, axes, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, rules: shd.AxisRules,
+                    abstract_params: Any | None = None):
+    ap = abstract_params if abstract_params is not None else api.abstract_params(cfg)
+    return ap, _shardings(ap, api.param_axes(cfg), mesh, rules)
+
+
+def opt_shardings(abstract_params: Any, param_sh: Any, mesh: Mesh,
+                  cfg: ArchConfig | None = None,
+                  opt_rules: shd.AxisRules | None = None):
+    """AdamState(step, m, v): moments mirror the parameter shardings.
+
+    `opt_rules` decouples the moment layout from the parameter layout —
+    ZeRO-1-style: replicate (or lightly shard) the parameters for cheap
+    forward/backward collectives while the Adam moments stay fully sharded;
+    XLA inserts the small update-time reshards automatically."""
+    abstract_opt = jax.eval_shape(optim.adam_init, abstract_params)
+    rep = NamedSharding(mesh, P())
+    if opt_rules is not None and cfg is not None:
+        moment_sh = _shardings(abstract_params, api.param_axes(cfg), mesh,
+                               opt_rules)
+    else:
+        moment_sh = param_sh
+    return abstract_opt, optim.adam.AdamState(
+        step=rep,
+        m=jax.tree.map(lambda _, s: s, abstract_opt.m, moment_sh),
+        v=jax.tree.map(lambda _, s: s, abstract_opt.v, moment_sh),
+    )
+
+
+def batch_axes(cfg: ArchConfig, kind: str) -> dict:
+    """Logical axes of the input batch dict."""
+    if kind == "train":
+        ax = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if cfg.is_encdec:
+            ax["frames"] = ("batch", None, None)
+        if cfg.vision_dim:
+            ax["patches"] = ("batch", None, None)
+        return ax
+    if kind == "prefill":
+        ax = {"tokens": ("batch", None)}
+        if cfg.is_encdec:
+            ax["frames"] = ("batch", None, None)
+        if cfg.vision_dim:
+            ax["patches"] = ("batch", None, None)
+        return ax
+    return {"token": ("batch",)}
+
+
+def abstract_batch(cfg: ArchConfig, shape: ShapeConfig, kind: str) -> dict:
+    """ShapeDtypeStruct batch for the cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    if kind == "train":
+        if cfg.is_encdec:
+            return {"tokens": i32((b, s)), "labels": i32((b, s)),
+                    "frames": f32((b, cfg.max_source_positions, cfg.d_model))}
+        if cfg.vision_dim:
+            t = s - cfg.vision_tokens
+            return {"tokens": i32((b, t)), "labels": i32((b, t)),
+                    "patches": f32((b, cfg.vision_tokens, cfg.vision_dim))}
+        return {"tokens": i32((b, s)), "labels": i32((b, s))}
+    if kind == "prefill":
+        if cfg.is_encdec:
+            return {"tokens": i32((b, s)),
+                    "frames": f32((b, cfg.max_source_positions, cfg.d_model))}
+        if cfg.vision_dim:
+            return {"tokens": i32((b, s - cfg.vision_tokens)),
+                    "patches": f32((b, cfg.vision_tokens, cfg.vision_dim))}
+        return {"tokens": i32((b, s))}
+    return {"token": i32((b,))}
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, kind: str,
+                    mesh: Mesh, rules: shd.AxisRules):
+    ab = abstract_batch(cfg, shape, kind)
+    return ab, _shardings(ab, batch_axes(cfg, kind), mesh, rules)
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules: shd.AxisRules, dtype=jnp.bfloat16):
+    ac = api.abstract_caches(cfg, shape.global_batch, shape.seq_len, dtype)
+    return ac, _shardings(ac, api.cache_axes(cfg), mesh, rules)
+
+
+# --- the three lowerable cell programs ------------------------------------------
+def train_fn(cfg: ArchConfig, adam_cfg: optim.AdamConfig | None = None):
+    def step(params, opt_state, batch):
+        return api.train_step(params, opt_state, batch, cfg, adam_cfg)
+    return step
+
+
+def prefill_fn(cfg: ArchConfig, cache_len: int):
+    def run(params, batch):
+        return api.prefill(params, cfg, batch, cache_len=cache_len)
+    return run
+
+
+def serve_fn(cfg: ArchConfig):
+    def step(params, token, caches):
+        return api.serve_step(params, cfg, token, caches)
+    return step
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               rule_overrides: dict | None = None,
+               donate: bool = True,
+               opt_rule_overrides: dict | None = None):
+    """Build shardings and `.lower()` the cell's program.  Returns (lowered,
+    dict of metadata)."""
+    rules = rules_for(mesh, rule_overrides)
+    opt_rules = (rules_for(mesh, opt_rule_overrides)
+                 if opt_rule_overrides is not None else None)
+    with mesh, shd.axis_rules(mesh, rule_overrides):
+        ap, p_sh = param_shardings(cfg, mesh, rules)
+        if shape.kind == "train":
+            ao, o_sh = opt_shardings(ap, p_sh, mesh, cfg, opt_rules)
+            ab, b_sh = batch_shardings(cfg, shape, "train", mesh, rules)
+            fn = jax.jit(
+                train_fn(cfg),
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = fn.lower(ap, ao, ab)
+        elif shape.kind == "prefill":
+            ab, b_sh = batch_shardings(cfg, shape, "prefill", mesh, rules)
+            ac, c_sh = cache_shardings(cfg, shape, mesh, rules)
+            fn = jax.jit(
+                prefill_fn(cfg, shape.seq_len),
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(None, c_sh),
+            )
+            lowered = fn.lower(ap, ab)
+        else:  # decode
+            ab, b_sh = batch_shardings(cfg, shape, "decode", mesh, rules)
+            ac, c_sh = cache_shardings(cfg, shape, mesh, rules)
+            fn = jax.jit(
+                serve_fn(cfg),
+                in_shardings=(p_sh, b_sh["token"], c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,) if donate else (),
+            )
+            lowered = fn.lower(ap, ab["token"], ac)
+    meta = {"arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+            "mesh": dict(mesh.shape)}
+    return lowered, meta

@@ -1,0 +1,105 @@
+"""LM training driver.
+
+Production shape: `--arch gemma2-27b --shape train_4k` on the pod mesh (the
+dry-run proves those lower/compile); locally runnable shape: `--reduced`
+trains the smoke-scale config of the same family on the host devices.
+
+Fault tolerance mirrors core/runner.py: atomic checkpoints carry params,
+optimizer, data cursor and RNG; `--resume` restarts from the newest
+complete checkpoint (also onto a different device count — elastic).
+
+    PYTHONPATH=src python -m repro.launch.train --arch rwkv6-1.6b \
+        --reduced --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from .. import configs, optim
+from ..core import checkpoints
+from ..data import TokenStream
+from ..models import api
+from ..parallel import sharding as shd
+from . import mesh as mesh_lib, specs
+
+
+def build_train_fn(cfg, mesh, adam_cfg, rule_overrides=None):
+    rules = specs.rules_for(mesh, rule_overrides)
+    ap, p_sh = specs.param_shardings(cfg, mesh, rules)
+    ao, o_sh = specs.opt_shardings(ap, p_sh, mesh)
+    fn = jax.jit(specs.train_fn(cfg, adam_cfg),
+                 in_shardings=(p_sh, o_sh, None),
+                 out_shardings=(p_sh, o_sh, None),
+                 donate_argnums=(0, 1))
+    return fn, p_sh, o_sh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b", choices=configs.ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="checkpoints/lm")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    mesh = mesh_lib.make_host_mesh()
+    adam_cfg = optim.AdamConfig(lr=args.lr, grad_clip=1.0)
+    train, p_sh, o_sh = build_train_fn(cfg, mesh, adam_cfg)
+
+    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    opt_state = optim.adam_init(params)
+    stream = TokenStream(cfg, args.batch, args.seq, seed=args.seed)
+    start = 0
+
+    ckpt_dir = os.path.join(args.checkpoint_dir, cfg.name)
+    if args.resume:
+        step = checkpoints.latest_step(ckpt_dir)
+        if step is not None:
+            tree, manifest = checkpoints.restore(
+                ckpt_dir, step, {"params": params, "opt": opt_state})
+            params, opt_state = tree["params"], tree["opt"]
+            stream.load_state_dict(manifest["meta"]["stream"])
+            start = int(manifest["meta"]["step"])
+            print(f"resumed from step {start}")
+
+    with mesh, shd.axis_rules(mesh):
+        for k in range(start, args.steps):
+            batch = stream.next()
+            t0 = time.perf_counter()
+            params, opt_state, metrics = train(params, opt_state, batch)
+            metrics = jax.device_get(metrics)
+            dt = time.perf_counter() - t0
+            tput = args.batch * args.seq / dt
+            print(f"step {k:5d} loss={float(metrics['loss']):.4f} "
+                  f"grad={float(metrics['grad_norm']):.3f} "
+                  f"{dt*1e3:8.1f} ms  {tput_str(tput)}", flush=True)
+            if (k + 1) % args.checkpoint_every == 0 or k + 1 == args.steps:
+                checkpoints.save(
+                    ckpt_dir, k + 1,
+                    {"params": jax.device_get(params),
+                     "opt": jax.device_get(opt_state)},
+                    meta={"step": k + 1, "stream": stream.state_dict(),
+                          "arch": cfg.name})
+    print("done")
+
+
+def tput_str(tput: float) -> str:
+    return f"{tput:,.0f} tok/s"
+
+
+if __name__ == "__main__":
+    main()

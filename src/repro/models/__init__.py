@@ -1,0 +1,18 @@
+"""Assigned-architecture substrate: the ten LM-family configs share this
+single composable stack.
+
+  config       ArchConfig dataclass (static, hashable, jit-friendly)
+  attention    GQA + RoPE + SWA + softcap; train/prefill/decode paths
+  moe          DeepSeekMoE-style shared+routed experts, GShard dispatch
+  ssm          Mamba-2-style selective SSM (hymba branch)
+  rwkv         RWKV-6 time/channel mixing
+  blocks       norm+mixer+FFN block assembly, per-layer kinds, caches
+  lm           decoder-only assembly (scan over layer groups, chunked CE)
+  encdec       whisper-style encoder-decoder
+  api          uniform dispatch the launcher/dry-run program against
+"""
+from . import api, attention, blocks, config, encdec, lm, moe, rwkv, ssm
+from .config import ArchConfig
+
+__all__ = ["api", "attention", "blocks", "config", "encdec", "lm", "moe",
+           "rwkv", "ssm", "ArchConfig"]

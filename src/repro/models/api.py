@@ -1,0 +1,105 @@
+"""Uniform model API over decoder-only (lm.py) and enc-dec (encdec.py)
+architectures — what the launcher, dry-run and benchmarks program against.
+
+Every function takes the static ArchConfig and dispatches on family.  Batch
+dicts are produced by `data.synthetic` / `launch.specs.input_specs` with the
+same keys used here.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from . import encdec, lm
+from .config import ArchConfig
+
+
+def init(key: jax.Array, cfg: ArchConfig) -> dict:
+    return encdec.init(key, cfg) if cfg.is_encdec else lm.init(key, cfg)
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    return encdec.param_axes(cfg) if cfg.is_encdec else lm.param_axes(cfg)
+
+
+def abstract_params(cfg: ArchConfig) -> Any:
+    """ShapeDtypeStruct pytree of the parameters (no allocation).
+
+    Honors cfg.param_dtype: training keeps f32 masters; serving cells lower
+    against bf16 weights (the deployed artifact)."""
+    def build():
+        p = init(jax.random.PRNGKey(0), cfg)
+        if cfg.param_dtype != "float32":
+            p = jax.tree.map(lambda x: x.astype(cfg.param_dtype), p)
+        return p
+    return jax.eval_shape(build)
+
+
+def loss(params: dict, cfg: ArchConfig, batch: dict):
+    return (encdec.lm_loss if cfg.is_encdec else lm.lm_loss)(params, cfg, batch)
+
+
+def train_step(params: dict, opt_state, batch: dict, cfg: ArchConfig,
+               adam_cfg: optim.AdamConfig | None = None):
+    fn = encdec.train_step if cfg.is_encdec else lm.train_step
+    return fn(params, opt_state, batch, cfg, adam_cfg)
+
+
+def prefill(params: dict, cfg: ArchConfig, batch: dict,
+            cache_len: int | None = None, cache_dtype=jnp.bfloat16):
+    """batch: {"tokens", optional "patches"/"frames"} -> (logits, caches)."""
+    if cfg.is_encdec:
+        return encdec.prefill(params, cfg, batch["frames"], batch["tokens"],
+                              cache_len=cache_len, cache_dtype=cache_dtype)
+    return lm.prefill(params, cfg, batch["tokens"],
+                      patches=batch.get("patches"), cache_len=cache_len,
+                      cache_dtype=cache_dtype)
+
+
+def decode_step(params: dict, cfg: ArchConfig, token: jax.Array, caches: dict):
+    fn = encdec.decode_step if cfg.is_encdec else lm.decode_step
+    return fn(params, cfg, token, caches)
+
+
+def serve_step(params: dict, cfg: ArchConfig, token: jax.Array, caches: dict):
+    """Alias used by the dry-run cells (one new token against the caches)."""
+    return decode_step(params, cfg, token, caches)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    if cfg.is_encdec:
+        raise ValueError("enc-dec caches are built by prefill (cross-KV "
+                         "depends on the encoder output)")
+    return lm.init_caches(cfg, batch, max_len, dtype)
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    return encdec.cache_axes(cfg) if cfg.is_encdec else lm.cache_axes(cfg)
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree of the decode caches (no allocation)."""
+    if cfg.is_encdec:
+        def build():
+            self_c = jax.tree.map(
+                lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype),
+                _enc_self_cache(cfg, batch, max_len, dtype))
+            cross = {
+                "k": jnp.zeros((cfg.n_layers, batch, cfg.kv_heads,
+                                cfg.max_source_positions, cfg.hd), dtype),
+                "v": jnp.zeros((cfg.n_layers, batch, cfg.kv_heads,
+                                cfg.max_source_positions, cfg.hd), dtype),
+            }
+            return {"self": self_c, "cross": cross}
+        return jax.eval_shape(build)
+    return jax.eval_shape(lambda: lm.init_caches(cfg, batch, max_len, dtype))
+
+
+def _enc_self_cache(cfg, batch, max_len, dtype):
+    from . import attention
+    return attention.init_cache(cfg, batch, max_len, window=None, dtype=dtype)

@@ -1,0 +1,258 @@
+"""Transformer block assembly: norms + mixer + FFN for every assigned arch.
+
+A block is `(params, cfg, layer_kind)` plus a mode:
+
+    mode="train"    full-sequence, no cache
+    mode="prefill"  full-sequence, builds cache
+    mode="decode"   single token against cache
+
+`layer_kind` carries the static per-layer choices: attention window
+(gemma-2 local/global alternation, hymba/danube SWA) and FFN flavor
+(deepseek/moonshot dense-prefix layers).  Cache pytrees mirror the mixer:
+attention layers carry a KV dict, SSM/RWKV layers a state dict, hybrid
+layers both.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+from ..parallel import sharding
+from . import attention, moe, rwkv, ssm
+from .config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    window: int | None          # None -> full attention
+    ffn: str                    # swiglu | geglu | gelu_mlp | moe | rwkv_cmix
+    d_ff: int
+
+
+def layer_kind(cfg: ArchConfig, i: int) -> LayerKind:
+    window = None if cfg.layer_is_global(i) else cfg.window
+    if cfg.ffn == "moe" and i < cfg.first_dense_layers:
+        return LayerKind(window, "swiglu", cfg.d_ff_dense or cfg.d_ff)
+    return LayerKind(window, cfg.ffn, cfg.d_ff)
+
+
+# --- dense FFNs -----------------------------------------------------------------
+def init_ffn(key: jax.Array, cfg: ArchConfig, kind: LayerKind) -> dict:
+    d, f = cfg.d_model, kind.d_ff
+    if kind.ffn == "moe":
+        return moe.init(key, cfg)
+    if kind.ffn == "rwkv_cmix":
+        return rwkv.init_channel_mix(key, cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wi": nn.dense_init(k1, d, f, bias=cfg.mlp_bias,
+                            w_init=lambda k, sh: s * jax.random.normal(k, sh, jnp.float32)),
+        "wo": nn.dense_init(k2, f, d, bias=cfg.mlp_bias,
+                            w_init=lambda k, sh: (1.0 / np.sqrt(f)) * jax.random.normal(k, sh, jnp.float32)),
+    }
+    if kind.ffn in ("swiglu", "geglu"):
+        p["wg"] = nn.dense_init(k3, d, f, bias=cfg.mlp_bias,
+                                w_init=lambda k, sh: s * jax.random.normal(k, sh, jnp.float32))
+    return p
+
+
+def ffn_axes(cfg: ArchConfig, kind: LayerKind) -> dict:
+    if kind.ffn == "moe":
+        return moe.axes(cfg)
+    if kind.ffn == "rwkv_cmix":
+        return rwkv.channel_mix_axes(cfg)
+    def wb(ax):
+        return {"w": ax, "b": (ax[-1],)} if cfg.mlp_bias else {"w": ax}
+    p = {"wi": wb(("embed", "mlp")), "wo": wb(("mlp", "embed"))}
+    if kind.ffn in ("swiglu", "geglu"):
+        p["wg"] = wb(("embed", "mlp"))
+    return p
+
+
+def apply_ffn(p: dict, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
+              state: jax.Array | None = None):
+    """-> (out, aux (2,), new_state_or_None)."""
+    zero_aux = jnp.zeros((2,), jnp.float32)
+    if kind.ffn == "moe":
+        out, aux = moe.apply(p, cfg, x)
+        return out, aux, None
+    if kind.ffn == "rwkv_cmix":
+        out, shift = rwkv.channel_mix(p, cfg, x, state)
+        return out, zero_aux, shift
+    h = nn.dense(p["wi"], x, dtype=x.dtype)
+    if kind.ffn == "swiglu":
+        h = jax.nn.silu(nn.dense(p["wg"], x, dtype=x.dtype)) * h
+    elif kind.ffn == "geglu":
+        h = jax.nn.gelu(nn.dense(p["wg"], x, dtype=x.dtype)) * h
+    else:  # gelu_mlp
+        h = jax.nn.gelu(h)
+    h = sharding.constrain(h, "batch", None, "mlp")
+    return nn.dense(p["wo"], h, dtype=x.dtype), zero_aux, None
+
+
+# --- norms ------------------------------------------------------------------------
+def init_norm(cfg: ArchConfig) -> dict:
+    if cfg.norm == "layernorm":
+        return nn.layernorm_init(cfg.d_model)
+    if cfg.norm == "layernorm_nobias":  # command-r
+        return nn.layernorm_init(cfg.d_model, bias=False)
+    return nn.rmsnorm_init(cfg.d_model)
+
+
+def norm_axes(cfg: ArchConfig) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": ("embed",), "bias": ("embed",)}
+    return {"scale": ("embed",)}
+
+
+def apply_norm(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.norm.startswith("layernorm"):
+        return nn.layernorm(p, x)
+    return nn.rmsnorm(p, x, scale_plus_one=cfg.norm_scale_plus_one)
+
+
+# --- block ---------------------------------------------------------------------
+def init_block(key: jax.Array, cfg: ArchConfig, kind: LayerKind) -> dict:
+    km, kf, _ = jax.random.split(key, 3)
+    p: dict = {"norm1": init_norm(cfg), "ffn": init_ffn(kf, cfg, kind)}
+    if cfg.mixer == "rwkv":
+        p["mixer"] = rwkv.init_time_mix(km, cfg)
+    elif cfg.mixer == "attn+mamba":
+        ka, ks = jax.random.split(km)
+        p["mixer"] = {"attn": attention.init(ka, cfg), "ssm": ssm.init(ks, cfg)}
+    else:
+        p["mixer"] = attention.init(km, cfg)
+    if not cfg.parallel_block:
+        p["norm2"] = init_norm(cfg)
+    if cfg.post_norms:
+        p["post_norm1"] = init_norm(cfg)
+        p["post_norm2"] = init_norm(cfg)
+    return p
+
+
+def block_axes(cfg: ArchConfig, kind: LayerKind) -> dict:
+    ax: dict = {"norm1": norm_axes(cfg), "ffn": ffn_axes(cfg, kind)}
+    if cfg.mixer == "rwkv":
+        ax["mixer"] = rwkv.time_mix_axes(cfg)
+    elif cfg.mixer == "attn+mamba":
+        ax["mixer"] = {"attn": attention.axes(cfg), "ssm": ssm.axes(cfg)}
+    else:
+        ax["mixer"] = attention.axes(cfg)
+    if not cfg.parallel_block:
+        ax["norm2"] = norm_axes(cfg)
+    if cfg.post_norms:
+        ax["post_norm1"] = norm_axes(cfg)
+        ax["post_norm2"] = norm_axes(cfg)
+    return ax
+
+
+def init_block_cache(cfg: ArchConfig, kind: LayerKind, batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> dict:
+    """Decode/prefill cache for one block (empty)."""
+    cache: dict = {}
+    if cfg.mixer == "rwkv":
+        # one dict carries wkv state + time-mix and channel-mix shifts
+        cache["mixer"] = rwkv.init_state(cfg, batch, dtype)
+        return cache
+    if cfg.mixer == "attn+mamba":
+        cache["mixer"] = {
+            "attn": attention.init_cache(cfg, batch, max_len,
+                                         window=kind.window, dtype=dtype),
+            "ssm": ssm.init_state(cfg, batch, dtype),
+        }
+        return cache
+    cache["mixer"] = attention.init_cache(cfg, batch, max_len,
+                                          window=kind.window, dtype=dtype)
+    return cache
+
+
+def block_cache_axes(cfg: ArchConfig) -> dict:
+    if cfg.mixer == "rwkv":
+        return {"mixer": rwkv.state_axes()}
+    if cfg.mixer == "attn+mamba":
+        return {"mixer": {"attn": attention.cache_axes(),
+                          "ssm": ssm.state_axes()}}
+    return {"mixer": attention.cache_axes()}
+
+
+def _mix(p: dict, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
+         mode: str, cache: dict | None):
+    """Apply the mixer.  Returns (out, new_cache_or_None)."""
+    if cfg.mixer == "rwkv":
+        st = cache["mixer"] if cache else None
+        out, wkv_s, shift = rwkv.time_mix(
+            p, cfg, x,
+            st["wkv"] if st else None, st["shift_t"] if st else None)
+        if mode == "train":
+            return out, None
+        new = {"wkv": wkv_s, "shift_t": shift,
+               "shift_c": st["shift_c"] if st else
+               jnp.zeros((x.shape[0], cfg.d_model), x.dtype)}
+        return out, new
+
+    if cfg.mixer == "attn+mamba":
+        ca = cache["mixer"] if cache else None
+        if mode == "train":
+            a_out = attention.full_attention(p["attn"], cfg, x, window=kind.window)
+            s_out, s_state = ssm.apply_seq(p["ssm"], cfg, x, None)
+            return 0.5 * (a_out + s_out), None
+        if mode == "prefill":
+            a_out, a_cache = attention.prefill_attention(
+                p["attn"], cfg, x, ca["attn"], window=kind.window)
+            s_out, s_state = ssm.apply_seq(p["ssm"], cfg, x, None)
+        else:
+            a_out, a_cache = attention.decode_attention(
+                p["attn"], cfg, x, ca["attn"], window=kind.window,
+                combine=cfg.decode_combine)
+            s_out, s_state = ssm.apply_step(p["ssm"], cfg, x, ca["ssm"])
+        return 0.5 * (a_out + s_out), {"attn": a_cache, "ssm": s_state}
+
+    # pure attention
+    ca = cache["mixer"] if cache else None
+    if mode == "train":
+        return attention.full_attention(p, cfg, x, window=kind.window), None
+    if mode == "prefill":
+        out, new = attention.prefill_attention(p, cfg, x, ca, window=kind.window)
+    else:
+        out, new = attention.decode_attention(p, cfg, x, ca, window=kind.window,
+                                              combine=cfg.decode_combine)
+    return out, new
+
+
+def apply_block(p: dict, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
+                mode: str = "train", cache: dict | None = None):
+    """-> (x, aux (2,), new_cache_or_None)."""
+    h = apply_norm(p["norm1"], cfg, x)
+
+    if cfg.parallel_block:  # command-r: attn & ffn read the same norm
+        m_out, m_cache = _mix(p["mixer"], cfg, kind, h, mode, cache)
+        f_out, aux, f_state = apply_ffn(p["ffn"], cfg, kind, h)
+        x = x + m_out + f_out
+        new_cache = None if m_cache is None else {"mixer": m_cache}
+        return x, aux, new_cache
+
+    m_out, m_cache = _mix(p["mixer"], cfg, kind, h, mode, cache)
+    if cfg.post_norms:
+        m_out = apply_norm(p["post_norm1"], cfg, m_out)
+    x = x + m_out
+    x = sharding.constrain(x, "batch", "act_seq", None)
+
+    h2 = apply_norm(p["norm2"], cfg, x)
+    ffn_state_in = (cache["mixer"]["shift_c"]
+                    if (cache and cfg.mixer == "rwkv") else None)
+    f_out, aux, f_state = apply_ffn(p["ffn"], cfg, kind, h2, ffn_state_in)
+    if cfg.post_norms:
+        f_out = apply_norm(p["post_norm2"], cfg, f_out)
+    x = x + f_out
+    x = sharding.constrain(x, "batch", "act_seq", None)
+
+    if m_cache is None:
+        return x, aux, None
+    if cfg.mixer == "rwkv" and f_state is not None:
+        m_cache = dict(m_cache, shift_c=f_state)
+    return x, aux, {"mixer": m_cache}

@@ -1,0 +1,282 @@
+"""Whisper-style encoder-decoder backbone (whisper-tiny).
+
+Per the brief the audio frontend is a STUB: `input_specs()` supplies
+precomputed frame embeddings (B, S_src, D) — the output of whisper's conv1d
+stack — and the encoder adds learned positions and runs bidirectional
+attention.  The decoder is a causal transformer with cross-attention to the
+encoder output; decode carries a self-attention KV cache plus the (static)
+cross-attention KV computed once at prefill.
+
+Whisper specifics honored: layernorm (pre-LN + final LN), GELU MLPs,
+attention biases everywhere except wk, learned positional embeddings, no
+RoPE, tied decoder embedding / output head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn, optim
+from ..kernels import ops as kops
+from ..parallel import sharding
+from . import attention, blocks
+from .config import ArchConfig
+
+
+def _kind(cfg: ArchConfig) -> blocks.LayerKind:
+    return blocks.LayerKind(None, "gelu_mlp", cfg.d_ff)
+
+
+def _init_xattn(key: jax.Array, cfg: ArchConfig) -> dict:
+    return attention.init(key, cfg)
+
+
+def _stack(trees: list) -> dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init(key: jax.Array, cfg: ArchConfig) -> dict:
+    kenc, kdec, kemb, kpos_e, kpos_d = jax.random.split(key, 5)
+    kind = _kind(cfg)
+
+    enc_blocks = []
+    for i in range(cfg.encoder_layers):
+        kenc, sub = jax.random.split(kenc)
+        enc_blocks.append(blocks.init_block(sub, cfg, kind))
+
+    dec_blocks = []
+    for i in range(cfg.n_layers):
+        kdec, s1, s2, s3 = jax.random.split(kdec, 4)
+        blk = blocks.init_block(s1, cfg, kind)
+        blk["xattn"] = _init_xattn(s2, cfg)
+        blk["norm_x"] = blocks.init_norm(cfg)
+        dec_blocks.append(blk)
+
+    return {
+        "enc_pos": {"table": 0.02 * jax.random.normal(
+            kpos_e, (cfg.max_source_positions, cfg.d_model), jnp.float32)},
+        "encoder": _stack(enc_blocks),
+        "enc_final_norm": blocks.init_norm(cfg),
+        "embed": nn.embedding_init(kemb, cfg.vocab, cfg.d_model),
+        "dec_pos": {"table": 0.02 * jax.random.normal(
+            kpos_d, (cfg.max_positions, cfg.d_model), jnp.float32)},
+        "decoder": _stack(dec_blocks),
+        "final_norm": blocks.init_norm(cfg),
+    }
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    kind = _kind(cfg)
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(s, str) or s is None for s in x)
+    prepend = lambda tree: jax.tree.map(lambda ax: (None,) + tuple(ax), tree,
+                                        is_leaf=is_ax)
+    dec_ax = blocks.block_axes(cfg, kind)
+    dec_ax["xattn"] = attention.axes(cfg)
+    dec_ax["norm_x"] = blocks.norm_axes(cfg)
+    return {
+        "enc_pos": {"table": (None, "embed")},
+        "encoder": prepend(blocks.block_axes(cfg, kind)),
+        "enc_final_norm": blocks.norm_axes(cfg),
+        "embed": {"table": ("vocab", "embed")},
+        "dec_pos": {"table": (None, "embed")},
+        "decoder": prepend(dec_ax),
+        "final_norm": blocks.norm_axes(cfg),
+    }
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    is_ax = lambda x: x is None or (isinstance(x, tuple) and all(
+        isinstance(s, str) or s is None for s in x))
+    prepend = lambda tree: jax.tree.map(
+        lambda ax: (None,) + tuple(ax) if ax is not None else None, tree,
+        is_leaf=is_ax)
+    return {
+        "self": prepend(attention.cache_axes()),
+        "cross": prepend({"k": ("batch", "kv_heads", None, None),
+                          "v": ("batch", "kv_heads", None, None)}),
+    }
+
+
+# --- encoder ---------------------------------------------------------------------
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_src, D) stub frontend embeddings -> encoder states."""
+    kind = _kind(cfg)
+    s = frames.shape[1]
+    x = frames.astype(cfg.dtype) + params["enc_pos"]["table"][:s].astype(cfg.dtype)
+    x = sharding.constrain(x, "batch", "act_seq", None)
+
+    def body(x, p_l):
+        # bidirectional: full_attention with causal disabled via direct call
+        h = blocks.apply_norm(p_l["norm1"], cfg, x)
+        q, k, v = attention._qkv(p_l["mixer"], cfg, h)
+        o = kops.attention(q, k, v, causal=False, window=None,
+                           softcap=None, impl=cfg.attn_impl,
+                           block_k=cfg.attn_block_k, unroll=cfg.unroll_scans)
+        x = x + attention._out(p_l["mixer"], cfg, o)
+        h2 = blocks.apply_norm(p_l["norm2"], cfg, x)
+        f, _, _ = blocks.apply_ffn(p_l["ffn"], cfg, kind, h2)
+        x = x + f
+        return sharding.constrain(x, "batch", "act_seq", None), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(fn, x, params["encoder"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = fn(x, jax.tree.map(lambda a, i=i: a[i], params["encoder"]))
+    return blocks.apply_norm(params["enc_final_norm"], cfg, x)
+
+
+# --- decoder ---------------------------------------------------------------------
+def _cross_kv(p: dict, cfg: ArchConfig, enc: jax.Array) -> dict:
+    b, s, _ = enc.shape
+    k = nn.dense(p["wk"], enc, dtype=enc.dtype).reshape(b, s, cfg.kv_heads, cfg.hd)
+    v = nn.dense(p["wv"], enc, dtype=enc.dtype).reshape(b, s, cfg.kv_heads, cfg.hd)
+    return {"k": jnp.swapaxes(k, 1, 2), "v": jnp.swapaxes(v, 1, 2)}
+
+
+def _cross_attend(p: dict, cfg: ArchConfig, x: jax.Array, kv: dict) -> jax.Array:
+    b, s, _ = x.shape
+    q = nn.dense(p["wq"], x, dtype=x.dtype).reshape(b, s, cfg.n_heads, cfg.hd)
+    q = jnp.swapaxes(q, 1, 2)
+    o = kops.attention(q, kv["k"].astype(x.dtype), kv["v"].astype(x.dtype),
+                       causal=False, window=None, softcap=None,
+                       impl=cfg.attn_impl, block_k=cfg.attn_block_k,
+                       unroll=cfg.unroll_scans)
+    return attention._out(p, cfg, o)
+
+
+def _decoder_block(p_l, cfg, kind, x, mode, cache):
+    """Self-attn + cross-attn + FFN.  cache = {"self": kv, "cross": kv}."""
+    h = blocks.apply_norm(p_l["norm1"], cfg, x)
+    if mode == "train":
+        a = attention.full_attention(p_l["mixer"], cfg, h, window=None)
+        new_self = None
+    elif mode == "prefill":
+        a, new_self = attention.prefill_attention(p_l["mixer"], cfg, h,
+                                                  cache["self"], window=None)
+    else:
+        a, new_self = attention.decode_attention(
+            p_l["mixer"], cfg, h, cache["self"], window=None,
+            combine=cfg.decode_combine)
+    x = x + a
+    hx = blocks.apply_norm(p_l["norm_x"], cfg, x)
+    x = x + _cross_attend(p_l["xattn"], cfg, hx, cache["cross"])
+    h2 = blocks.apply_norm(p_l["norm2"], cfg, x)
+    f, _, _ = blocks.apply_ffn(p_l["ffn"], cfg, kind, h2)
+    x = x + f
+    x = sharding.constrain(x, "batch", "act_seq", None)
+    new_cache = None if new_self is None else {"self": new_self,
+                                               "cross": cache["cross"]}
+    return x, new_cache
+
+
+def decode_hidden(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                  positions: jax.Array, caches: dict, mode: str
+                  ) -> tuple[jax.Array, dict | None]:
+    kind = _kind(cfg)
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.dtype)
+    x = x + params["dec_pos"]["table"][positions].astype(cfg.dtype)
+    x = sharding.constrain(x, "batch", "act_seq", None)
+
+    def body(x, scanned):
+        p_l, c_l = scanned
+        x, nc = _decoder_block(p_l, cfg, kind, x, mode, c_l)
+        return x, nc
+
+    fn = (jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+          if (cfg.remat and mode == "train") else body)
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(fn, x, (params["decoder"], caches))
+    else:
+        ncs = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a, i=i: a[i], (params["decoder"], caches))
+            x, nc = fn(x, sl)
+            ncs.append(nc)
+        new_caches = (None if ncs and ncs[0] is None
+                      else jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+    return x, new_caches
+
+
+# --- losses / steps ----------------------------------------------------------------
+def lm_loss(params: dict, cfg: ArchConfig, batch: dict) -> tuple[jax.Array, dict]:
+    """batch: {"frames" (B,S_src,D), "tokens" (B,T), "labels" (B,T)}."""
+    enc = encode(params, cfg, batch["frames"])
+    b, t = batch["tokens"].shape
+    cross = jax.vmap(lambda p_l: _cross_kv(p_l["xattn"], cfg, enc))(
+        params["decoder"])
+    kind = _kind(cfg)
+    x = jnp.take(params["embed"]["table"], batch["tokens"], axis=0).astype(cfg.dtype)
+    x = x + params["dec_pos"]["table"][:t][None].astype(cfg.dtype)
+    x = sharding.constrain(x, "batch", "act_seq", None)
+
+    def body(x, scanned):
+        p_l, cross_l = scanned
+        x, _ = _decoder_block(p_l, cfg, kind, x, "train",
+                              {"self": None, "cross": cross_l})
+        return x, None
+
+    fn = (jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+          if cfg.remat else body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(fn, x, (params["decoder"], cross))
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = fn(x, jax.tree.map(lambda a, i=i: a[i],
+                                      (params["decoder"], cross)))
+
+    from . import lm as lm_mod
+    mask = batch.get("mask", jnp.ones_like(batch["labels"], jnp.float32))
+    # tied head (whisper ties embed/head): reuse the lm chunked CE; the shim
+    # params carry exactly what logits_for needs.
+    shim = {"final_norm": params["final_norm"], "embed": params["embed"]}
+    nll, count = lm_mod.chunked_ce(shim, cfg, x, batch["labels"],
+                                   mask.astype(jnp.float32))
+    ce = nll / jnp.maximum(count, 1.0)
+    return ce, {"loss": ce, "ce": ce, "tokens": count}
+
+
+def train_step(params: dict, opt_state, batch: dict, cfg: ArchConfig,
+               adam_cfg: optim.AdamConfig | None = None):
+    adam_cfg = adam_cfg or optim.AdamConfig(lr=3e-4, grad_clip=1.0)
+    (loss, metrics), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+        params, cfg, batch)
+    metrics["grad_norm"] = optim.global_norm(grads)
+    params, opt_state = optim.adam_update(adam_cfg, params, grads, opt_state)
+    return params, opt_state, metrics
+
+
+def prefill(params: dict, cfg: ArchConfig, frames: jax.Array,
+            tokens: jax.Array, cache_len: int | None = None,
+            cache_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    """Encode + run the prompt through the decoder, building caches."""
+    b, t = tokens.shape
+    enc = encode(params, cfg, frames)
+    cross = jax.vmap(lambda p_l: _cross_kv(p_l["xattn"], cfg, enc))(
+        params["decoder"])
+    self_c = attention.init_cache(cfg, b, cache_len or t, window=None,
+                                  dtype=cache_dtype)
+    self_stack = jax.tree.map(
+        lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), self_c)
+    caches = {"self": self_stack, "cross": cross}
+    positions = jnp.arange(t)[None]
+    x, new_caches = decode_hidden(params, cfg, tokens, positions, caches,
+                                  "prefill")
+    h = blocks.apply_norm(params["final_norm"], cfg, x[:, -1:])
+    w = params["embed"]["table"].T.astype(h.dtype)
+    logits = (h @ w).astype(jnp.float32)[:, 0]
+    return logits, new_caches
+
+
+def decode_step(params: dict, cfg: ArchConfig, token: jax.Array, caches: dict
+                ) -> tuple[jax.Array, dict]:
+    pos = caches["self"]["pos"][0][None, None]  # shared across layers
+    x, new_caches = decode_hidden(params, cfg, token[:, None],
+                                  pos.astype(jnp.int32), caches, "decode")
+    h = blocks.apply_norm(params["final_norm"], cfg, x)
+    w = params["embed"]["table"].T.astype(h.dtype)
+    logits = (h @ w).astype(jnp.float32)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,372 @@
+"""Decoder-only LM assembly for the assigned architectures (all but whisper).
+
+Layers are grouped for `lax.scan`: group size = the architecture's layer-kind
+period (gemma-2 local/global = 2, hymba global-every-8 = 8, otherwise 1), so
+every scan step executes an identical program.  MoE dense-prefix layers (the
+deepseek/moonshot first layer) are unrolled before the scan.  Training remats
+each group; the stored residual carry is sequence-sharded over `model`
+(Megatron-style SP) so the 27B/35B cells fit HBM — see parallel/sharding.py.
+
+The cross-entropy is computed in sequence chunks against the (vocab-sharded)
+output head without ever materializing (B, S, V) logits.
+
+Entry points (cfg is static):
+    init(key, cfg, ...)                  parameter pytree (f32 masters)
+    param_axes(cfg)                      logical-axis mirror for sharding
+    lm_loss(params, cfg, batch)          scalar loss + metrics
+    train_step(params, opt, batch, cfg)  one SGD step
+    prefill(params, cfg, tokens, ...)    (last-token logits, caches)
+    decode_step(params, cfg, token, c)   (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn, optim
+from ..parallel import sharding
+from . import blocks
+from .config import ArchConfig
+
+
+# --- structure helpers -----------------------------------------------------------
+def group_size(cfg: ArchConfig) -> int:
+    return cfg.window_pattern if cfg.window_pattern else 1
+
+
+def n_prefix(cfg: ArchConfig) -> int:
+    return cfg.first_dense_layers if cfg.ffn == "moe" else 0
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    g = group_size(cfg)
+    scanned = cfg.n_layers - n_prefix(cfg)
+    assert scanned % g == 0, (cfg.name, scanned, g)
+    return scanned // g
+
+
+def group_kinds(cfg: ArchConfig) -> list[blocks.LayerKind]:
+    """Layer kinds of the g blocks inside every scan group (kind depends on
+    the layer index only through i % g, which grouping preserves)."""
+    p = n_prefix(cfg)
+    assert p == 0 or group_size(cfg) == 1, "dense prefix requires group=1"
+    return [blocks.layer_kind(cfg, p + j) for j in range(group_size(cfg))]
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# --- init -------------------------------------------------------------------------
+def init(key: jax.Array, cfg: ArchConfig) -> dict:
+    ke, kh, kp, kl, kproj = jax.random.split(key, 5)
+    params: dict = {
+        "embed": nn.embedding_init(ke, cfg.vocab, cfg.d_model),
+        "final_norm": blocks.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": (1.0 / np.sqrt(cfg.d_model)) * jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab), jnp.float32)}
+
+    pre = []
+    for i in range(n_prefix(cfg)):
+        kp, sub = jax.random.split(kp)
+        pre.append(blocks.init_block(sub, cfg, blocks.layer_kind(cfg, i)))
+    if pre:
+        params["prefix"] = pre
+
+    kinds = group_kinds(cfg)
+    groups = []
+    for m in range(n_groups(cfg)):
+        kl, sub = jax.random.split(kl)
+        subkeys = jax.random.split(sub, len(kinds))
+        groups.append({f"b{j}": blocks.init_block(subkeys[j], cfg, kinds[j])
+                       for j in range(len(kinds))})
+    params["layers"] = _stack(groups)
+
+    if cfg.vision_dim:  # llava projector (2-layer GELU MLP)
+        k1, k2 = jax.random.split(kproj)
+        s = 1.0 / np.sqrt(cfg.vision_dim)
+        params["projector"] = {
+            "w1": nn.dense_init(k1, cfg.vision_dim, cfg.d_model, bias=True),
+            "w2": nn.dense_init(k2, cfg.d_model, cfg.d_model, bias=True),
+        }
+    return params
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    kinds = group_kinds(cfg)
+    group_ax = {f"b{j}": blocks.block_axes(cfg, kinds[j])
+                for j in range(len(kinds))}
+    # scanned leaves gain a leading (n_groups) axis -> prepend None
+    layers_ax = jax.tree.map(
+        lambda ax: (None,) + tuple(ax),
+        group_ax,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(s, str) or s is None for s in x),
+    )
+    ax: dict = {
+        "embed": {"table": ("vocab", "embed")},
+        "final_norm": blocks.norm_axes(cfg),
+        "layers": layers_ax,
+    }
+    if not cfg.tie_embeddings:
+        ax["head"] = {"w": ("embed", "vocab")}
+    if n_prefix(cfg):
+        ax["prefix"] = [blocks.block_axes(cfg, blocks.layer_kind(cfg, i))
+                        for i in range(n_prefix(cfg))]
+    if cfg.vision_dim:
+        ax["projector"] = {"w1": {"w": (None, "embed"), "b": ("embed",)},
+                           "w2": {"w": ("embed", "embed"), "b": ("embed",)}}
+    return ax
+
+
+# --- caches -------------------------------------------------------------------------
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    kinds = group_kinds(cfg)
+    group = {f"b{j}": blocks.init_block_cache(cfg, kinds[j], batch, max_len,
+                                              dtype)
+             for j in range(len(kinds))}
+    stacked = jax.tree.map(
+        lambda x: jnp.zeros((n_groups(cfg),) + x.shape, x.dtype), group)
+    caches: dict = {"layers": stacked}
+    if n_prefix(cfg):
+        caches["prefix"] = [
+            blocks.init_block_cache(cfg, blocks.layer_kind(cfg, i), batch,
+                                    max_len, dtype)
+            for i in range(n_prefix(cfg))]
+    return caches
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    kinds = group_kinds(cfg)
+    group_ax = {f"b{j}": blocks.block_cache_axes(cfg)
+                for j in range(len(kinds))}
+    is_ax = lambda x: x is None or (isinstance(x, tuple) and all(
+        isinstance(s, str) or s is None for s in x))
+    layers_ax = jax.tree.map(
+        lambda ax: (None,) + tuple(ax) if ax is not None else None,
+        group_ax, is_leaf=is_ax)
+    caxes: dict = {"layers": layers_ax}
+    if n_prefix(cfg):
+        caxes["prefix"] = [blocks.block_cache_axes(cfg)
+                           for _ in range(n_prefix(cfg))]
+    return caxes
+
+
+# --- forward -------------------------------------------------------------------------
+def embed_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = x.astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def project_patches(params: dict, cfg: ArchConfig, patches: jax.Array) -> jax.Array:
+    h = nn.dense(params["projector"]["w1"], patches.astype(cfg.dtype))
+    return nn.dense(params["projector"]["w2"], jax.nn.gelu(h))
+
+
+def forward_hidden(params: dict, cfg: ArchConfig, x: jax.Array,
+                   mode: str = "train", caches: dict | None = None
+                   ) -> tuple[jax.Array, jax.Array, dict | None]:
+    """Embedded input (B, S, D) -> (hidden, moe_aux (2,), new_caches)."""
+    kinds = group_kinds(cfg)
+    g = len(kinds)
+    x = sharding.constrain(x, "batch", "act_seq", None)
+    aux_total = jnp.zeros((2,), jnp.float32)
+    new_prefix = []
+    for i in range(n_prefix(cfg)):
+        c = caches["prefix"][i] if caches else None
+        x, aux, nc = blocks.apply_block(
+            params["prefix"][i], cfg, blocks.layer_kind(cfg, i), x, mode, c)
+        aux_total = aux_total + aux
+        new_prefix.append(nc)
+
+    def group_fn(x, scanned):
+        p_g, c_g = scanned
+        aux_g = jnp.zeros((2,), jnp.float32)
+        new_c = {}
+        for j in range(g):
+            cj = c_g[f"b{j}"] if c_g is not None else None
+            x, aux, ncj = blocks.apply_block(p_g[f"b{j}"], cfg, kinds[j], x,
+                                             mode, cj)
+            aux_g = aux_g + aux
+            new_c[f"b{j}"] = ncj
+        if any(v is None for v in new_c.values()):
+            new_c = None
+        return x, (aux_g, new_c)
+
+    body = group_fn
+    if cfg.remat and mode == "train":
+        policy = {
+            "dots": jax.checkpoint_policies.dots_saveable,
+            "proj_dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "save_gathered": jax.checkpoint_policies.save_only_these_names(
+                "gathered_weights"),
+        }.get(cfg.remat_policy, jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(group_fn, policy=policy)
+
+    layer_caches = caches["layers"] if caches else None
+    if cfg.scan_layers:
+        x, (aux_seq, new_layer_caches) = jax.lax.scan(
+            body, x, (params["layers"], layer_caches))
+        aux_total = aux_total + jnp.sum(aux_seq, axis=0)
+    else:
+        new_list = []
+        for m in range(n_groups(cfg)):
+            p_m = jax.tree.map(lambda a, m=m: a[m], params["layers"])
+            c_m = (jax.tree.map(lambda a, m=m: a[m], layer_caches)
+                   if layer_caches is not None else None)
+            x, (aux, nc) = body(x, (p_m, c_m))
+            aux_total = aux_total + aux
+            new_list.append(nc)
+        new_layer_caches = None if new_list and new_list[0] is None else (
+            _stack(new_list) if new_list else None)
+
+    new_caches = None
+    if mode != "train" and caches is not None:
+        new_caches = {"layers": new_layer_caches}
+        if new_prefix:
+            new_caches["prefix"] = new_prefix
+    return x, aux_total, new_caches
+
+
+def _head_weight(params: dict, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T  # (D, V)
+    return params["head"]["w"]
+
+
+def logits_for(params: dict, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
+    """hidden (B, S, D) -> logits (B, S, V) (f32, softcapped)."""
+    h = blocks.apply_norm(params["final_norm"], cfg, hidden)
+    w = _head_weight(params, cfg).astype(h.dtype)
+    logits = (h @ w).astype(jnp.float32)
+    logits = sharding.constrain(logits, "batch", None, "vocab")
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+# --- loss ------------------------------------------------------------------------------
+def chunked_ce(params: dict, cfg: ArchConfig, hidden: jax.Array,
+               labels: jax.Array, mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Cross-entropy without materializing (B, S, V): scan over seq chunks.
+
+    hidden: (B, S, D); labels, mask: (B, S).  Returns (nll_sum, count).
+    """
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = jnp.moveaxis(hidden.reshape(b, n_chunks, chunk, d), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, n_chunks, chunk), 1, 0)
+
+    def chunk_fn(carry, xs):
+        x_c, y_c, m_c = xs
+        logits = logits_for(params, cfg, x_c)  # (B, C, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(y_c, cfg.vocab, dtype=logits.dtype)
+        ll = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        nll = (lse - ll) * m_c
+        nll_sum, count = carry
+        return (nll_sum + jnp.sum(nll), count + jnp.sum(m_c)), None
+
+    body = jax.checkpoint(chunk_fn) if cfg.remat else chunk_fn
+    carry = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if cfg.unroll_scans:  # dry-run calibration: no while loop in the HLO
+        for i in range(n_chunks):
+            carry, _ = body(carry, (hc[i], yc[i], mc[i]))
+        nll_sum, count = carry
+    else:
+        (nll_sum, count), _ = jax.lax.scan(body, carry, (hc, yc, mc))
+    return nll_sum, count
+
+
+def lm_loss(params: dict, cfg: ArchConfig, batch: dict
+            ) -> tuple[jax.Array, dict]:
+    """batch: {"tokens" (B,S), "labels" (B,S), optional "patches"}."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    n_img = 0
+    if cfg.vision_dim and "patches" in batch:
+        img = project_patches(params, cfg, batch["patches"])
+        n_img = img.shape[1]
+        x = jnp.concatenate([img, x], axis=1)
+    x, aux, _ = forward_hidden(params, cfg, x, mode="train")
+    if n_img:  # positions [n_img-1, n_img+T-1) predict tok_0..tok_{T-1}
+        x = x[:, n_img - 1: n_img - 1 + tokens.shape[1]]
+    mask = batch.get("mask", jnp.ones_like(batch["labels"], jnp.float32))
+    nll_sum, count = chunked_ce(params, cfg, x, batch["labels"],
+                                mask.astype(jnp.float32))
+    ce = nll_sum / jnp.maximum(count, 1.0)
+    lb, z = aux[0], aux[1]
+    loss = ce + 0.01 * lb + 1e-3 * z
+    return loss, {"loss": loss, "ce": ce, "moe_lb": lb, "router_z": z,
+                  "tokens": count}
+
+
+def train_step(params: dict, opt_state: optim.adam.AdamState, batch: dict,
+               cfg: ArchConfig, adam_cfg: optim.AdamConfig | None = None):
+    """One synchronous data-parallel training step."""
+    adam_cfg = adam_cfg or optim.AdamConfig(lr=3e-4, grad_clip=1.0)
+    (loss, metrics), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+        params, cfg, batch)
+    metrics["grad_norm"] = optim.global_norm(grads)
+    params, opt_state = optim.adam_update(adam_cfg, params, grads, opt_state)
+    return params, opt_state, metrics
+
+
+# --- serving -------------------------------------------------------------------------
+def prefill(params: dict, cfg: ArchConfig, tokens: jax.Array,
+            patches: jax.Array | None = None, cache_len: int | None = None,
+            cache_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    """Process the prompt, build caches.  Returns (last-token logits, caches)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.vision_dim and patches is not None:
+        img = project_patches(params, cfg, patches)
+        x = jnp.concatenate([img, x], axis=1)
+    total = x.shape[1]
+    caches = init_caches(cfg, b, cache_len or total, cache_dtype)
+    x, _, caches = forward_hidden(params, cfg, x, mode="prefill", caches=caches)
+    logits = logits_for(params, cfg, x[:, -1:])[:, 0]
+    return logits, caches
+
+
+def decode_step(params: dict, cfg: ArchConfig, token: jax.Array, caches: dict
+                ) -> tuple[jax.Array, dict]:
+    """One decode step.  token: (B,) int32 -> (logits (B, V), caches)."""
+    x = embed_tokens(params, cfg, token[:, None])
+    x, _, caches = forward_hidden(params, cfg, x, mode="decode", caches=caches)
+    logits = logits_for(params, cfg, x)[:, 0]
+    return logits, caches
+
+
+def greedy_generate(params: dict, cfg: ArchConfig, prompt: jax.Array,
+                    n_new: int) -> jax.Array:
+    """Greedy decoding loop (examples / tests).  prompt: (B, S)."""
+    logits, caches = prefill(params, cfg, prompt,
+                             cache_len=prompt.shape[1] + n_new)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def step(carry, _):
+        tok, caches = carry
+        logits, caches = decode_step(params, cfg, tok, caches)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, caches), nxt
+
+    (_, _), toks = jax.lax.scan(step, (tok0, caches), None, length=n_new - 1)
+    return jnp.concatenate([tok0[None], toks], axis=0).T  # (B, n_new)

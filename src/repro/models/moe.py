@@ -1,0 +1,154 @@
+"""Mixture-of-experts FFN (deepseek-moe-16b / moonshot-v1-16b-a3b).
+
+Fine-grained MoE: `n_experts` routed experts with top-k gating plus
+`n_shared_experts` always-on shared experts (DeepSeekMoE, Dai et al. 2024).
+TPU-idiomatic GShard-style dispatch: tokens are blocked into groups, each
+group dispatches into per-expert capacity buffers through one-hot einsums,
+and expert weights shard over the `experts` logical axis (EP) — XLA inserts
+the token all-to-all from the sharding constraints.  This is the dense-
+capacity equivalent of "dropless" GPU token routing (see DESIGN.md §2):
+tokens beyond an expert's capacity drop to the shared/residual path, which
+the capacity factor makes rare.
+
+Aux losses: load-balancing (Switch) and router z-loss, returned for the
+training objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+from ..parallel import sharding
+from .config import ArchConfig
+
+
+def _capacity(group_size: int, cfg: ArchConfig) -> int:
+    cap = int(math.ceil(group_size * cfg.top_k * cfg.moe_capacity_factor
+                        / cfg.n_experts))
+    return max(8, -(-cap // 8) * 8)  # multiple of 8 for TPU tiling
+
+
+def init(key: jax.Array, cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ki, ko, ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": {"w": scale * jax.random.normal(kr, (d, e), jnp.float32)},
+        "wg": scale * jax.random.normal(kg, (e, d, f), jnp.float32),
+        "wi": scale * jax.random.normal(ki, (e, d, f), jnp.float32),
+        "wo": (1.0 / np.sqrt(f)) * jax.random.normal(ko, (e, f, d), jnp.float32),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wg": {"w": scale * jax.random.normal(k1, (d, fs), jnp.float32)},
+            "wi": {"w": scale * jax.random.normal(k2, (d, fs), jnp.float32)},
+            "wo": {"w": (1.0 / np.sqrt(fs)) * jax.random.normal(k3, (fs, d), jnp.float32)},
+        }
+    return p
+
+
+def axes(cfg: ArchConfig) -> dict:
+    ax = {
+        "router": {"w": ("embed", None)},
+        "wg": ("experts", "embed", "mlp"),
+        "wi": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    if cfg.n_shared_experts:
+        ax["shared"] = {
+            "wg": {"w": ("embed", "mlp")},
+            "wi": {"w": ("embed", "mlp")},
+            "wo": {"w": ("mlp", "embed")},
+        }
+    return ax
+
+
+def _route(p: dict, cfg: ArchConfig, x: jax.Array
+           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Router: x (G, T, D) -> (gates (G,T,k), experts (G,T,k), aux losses)."""
+    logits = (x.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk:
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch load-balance loss: E * sum_e f_e * P_e  (f = token fraction,
+    # P = mean router prob); z-loss stabilizes the logits.
+    e = cfg.n_experts
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
+    f_e = jnp.mean(onehot_top1, axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    lb_loss = e * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, idx, jnp.stack([lb_loss, z_loss])
+
+
+def _dispatch_combine(cfg: ArchConfig, gates, idx, group_size: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Dense dispatch/combine tensors for one capacity-bucketed group batch.
+
+    Returns (dispatch (G,T,E,C) bool-as-dtype, combine (G,T,E,C) f32).
+    Position of a token in its expert's buffer = its rank among the group's
+    tokens routed to that expert (per k-th choice, k-major so earlier
+    choices claim slots first).
+    """
+    e, cap = cfg.n_experts, _capacity(group_size, cfg)
+    disp = None
+    comb = None
+    # running per-expert fill count across the k choices
+    fill = jnp.zeros(gates.shape[:-2] + (1, e), jnp.float32)  # (G, 1, E)
+    for k in range(cfg.top_k):
+        oh = jax.nn.one_hot(idx[..., k], e, dtype=jnp.float32)     # (G,T,E)
+        pos = jnp.cumsum(oh, axis=-2) - oh + fill                  # (G,T,E)
+        fill = fill + jnp.sum(oh, axis=-2, keepdims=True)
+        within = pos < cap
+        oh = oh * within
+        pos_c = jax.nn.one_hot(jnp.sum(pos * oh, axis=-1).astype(jnp.int32),
+                               cap, dtype=jnp.float32)             # (G,T,C)
+        d_k = oh[..., :, None] * pos_c[..., None, :]               # (G,T,E,C)
+        c_k = d_k * gates[..., k, None, None]
+        disp = d_k if disp is None else disp + d_k
+        comb = c_k if comb is None else comb + c_k
+    return disp, comb
+
+
+def apply(p: dict, cfg: ArchConfig, x: jax.Array
+          ) -> tuple[jax.Array, jax.Array]:
+    """MoE FFN.  x: (B, S, D) -> (out (B, S, D), aux (2,) losses)."""
+    b, s, d = x.shape
+    tokens = b * s
+    group = min(cfg.moe_group_size, tokens)
+    n_groups = tokens // group
+    assert n_groups * group == tokens, (tokens, group)
+    xg = x.reshape(n_groups, group, d)
+    xg = sharding.constrain(xg, "batch", None, None)
+
+    gates, idx, aux = _route(p, cfg, xg)
+    disp, comb = _dispatch_combine(cfg, gates, idx, group)
+    disp = disp.astype(x.dtype)
+
+    # dispatch -> (G, E, C, D); experts shard over `experts` (EP): XLA turns
+    # the G (batch-sharded) -> E (expert-sharded) layout change into the
+    # canonical MoE all-to-all.
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg)
+    xe = sharding.constrain(xe, "batch", "experts", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    ye = sharding.constrain(ye, "batch", "experts", None, None)
+    out = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), ye)
+    out = out.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(nn.dense(sh["wg"], x, dtype=x.dtype)) * \
+            nn.dense(sh["wi"], x, dtype=x.dtype)
+        out = out + nn.dense(sh["wo"], hs, dtype=x.dtype)
+    return out, aux

@@ -1,0 +1,189 @@
+"""RWKV-6 "Finch" blocks (rwkv6-1.6b): attention-free linear RNN with
+data-dependent decay (Peng et al. 2024, arXiv:2404.05892).
+
+Time-mix:   token-shift interpolation with data-dependent mix (lora),
+            r/k/v/gate projections, per-channel data-dependent decay
+            w_t = exp(-exp(decay_t)), bonus u for the current token, and
+            the WKV recurrence — kernels.ops.gated_linear_scan with
+            decay_before_read=False (RWKV reads S_{t-1} + u*kv_t).
+Channel-mix: token-shifted squared-ReLU MLP with receptance gate.
+
+Heads have a fixed head dim (64 at 1.6B scale); the per-head (hd, hd) WKV
+state is the entire sequence memory — what makes the long_500k cell O(1)
+in context length.
+
+Decode carries: {wkv state (B,H,hd,hd), time-mix shift (B,D), channel-mix
+shift (B,D)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+from ..kernels import ops as kops
+from .config import ArchConfig
+
+_MIX_KEYS = ("r", "k", "v", "w", "g")
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int]:
+    hd = cfg.hd
+    return cfg.d_model // hd, hd
+
+
+def init_time_mix(key: jax.Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h, hd = _dims(cfg)
+    lora, dlora = cfg.rwkv_lora, cfg.rwkv_decay_lora
+    keys = jax.random.split(key, 12)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        # token-shift base mixes + the low-rank data-dependent part
+        "mix_base": 0.5 * jnp.ones((len(_MIX_KEYS), d), jnp.float32),
+        "mix_lora_a": {"w": s * jax.random.normal(keys[0], (d, len(_MIX_KEYS) * lora), jnp.float32)},
+        "mix_lora_b": s * jax.random.normal(keys[1], (len(_MIX_KEYS), lora, d), jnp.float32),
+        "wr": {"w": s * jax.random.normal(keys[2], (d, d), jnp.float32)},
+        "wk": {"w": s * jax.random.normal(keys[3], (d, d), jnp.float32)},
+        "wv": {"w": s * jax.random.normal(keys[4], (d, d), jnp.float32)},
+        "wg": {"w": s * jax.random.normal(keys[5], (d, d), jnp.float32)},
+        "decay_base": -6.0 * jnp.ones((d,), jnp.float32),  # w ~ exp(-exp(-6))
+        "decay_lora_a": {"w": s * jax.random.normal(keys[6], (d, dlora), jnp.float32)},
+        "decay_lora_b": {"w": s * jax.random.normal(keys[7], (dlora, d), jnp.float32)},
+        "u_bonus": jnp.zeros((d,), jnp.float32),
+        "out_norm": nn.layernorm_init(hd),  # per-head group norm
+        "wo": {"w": s * jax.random.normal(keys[8], (d, d), jnp.float32)},
+    }
+    return p
+
+
+def time_mix_axes(cfg: ArchConfig) -> dict:
+    return {
+        "mix_base": (None, "embed"),
+        "mix_lora_a": {"w": ("embed", None)},
+        "mix_lora_b": (None, None, "embed"),
+        "wr": {"w": ("embed", "heads")},
+        "wk": {"w": ("embed", "heads")},
+        "wv": {"w": ("embed", "heads")},
+        "wg": {"w": ("embed", "heads")},
+        "decay_base": ("embed",),
+        "decay_lora_a": {"w": ("embed", None)},
+        "decay_lora_b": {"w": (None, "embed")},
+        "u_bonus": ("embed",),
+        "out_norm": {"scale": (None,), "bias": (None,)},
+        "wo": {"w": ("heads", "embed")},
+    }
+
+
+def init_channel_mix(key: jax.Array, cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "wk": {"w": s * jax.random.normal(k1, (d, f), jnp.float32)},
+        "wv": {"w": (1.0 / np.sqrt(f)) * jax.random.normal(k2, (f, d), jnp.float32)},
+        "wr": {"w": s * jax.random.normal(k3, (d, d), jnp.float32)},
+    }
+
+
+def channel_mix_axes(cfg: ArchConfig) -> dict:
+    return {
+        "mix_k": ("embed",),
+        "mix_r": ("embed",),
+        "wk": {"w": ("embed", "mlp")},
+        "wv": {"w": ("mlp", "embed")},
+        "wr": {"w": ("embed", "heads")},
+    }
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    h, hd = _dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def state_axes() -> dict:
+    return {"wkv": ("batch", "heads", None, None),
+            "shift_t": ("batch", "embed"),
+            "shift_c": ("batch", "embed")}
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} along the sequence; position 0 sees `prev` (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def time_mix(p: dict, cfg: ArchConfig, x: jax.Array,
+             wkv_state: jax.Array | None, shift: jax.Array | None
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """RWKV6 time mixing.  x: (B, T, D) -> (out, wkv_state', shift')."""
+    b, t, d = x.shape
+    h, hd = _dims(cfg)
+    lora = cfg.rwkv_lora
+    xs = _token_shift(x, shift)
+    delta = (xs - x).astype(jnp.float32)
+
+    # data-dependent token-shift mixes (one per r/k/v/w/g)
+    la = nn.dense(p["mix_lora_a"], x, dtype=jnp.float32)          # (B,T,5*lora)
+    la = jnp.tanh(la).reshape(b, t, len(_MIX_KEYS), lora)
+    dyn = jnp.einsum("btml,mld->btmd", la, p["mix_lora_b"])       # (B,T,5,D)
+    mixes = p["mix_base"][None, None] + dyn                       # (B,T,5,D)
+    xi = x.astype(jnp.float32)[:, :, None, :] + mixes * delta[:, :, None, :]
+    xr, xk, xv, xw, xg = (xi[:, :, i, :].astype(x.dtype)
+                          for i in range(len(_MIX_KEYS)))
+
+    r = nn.dense(p["wr"], xr, dtype=x.dtype).reshape(b, t, h, hd)
+    k = nn.dense(p["wk"], xk, dtype=x.dtype).reshape(b, t, h, hd)
+    v = nn.dense(p["wv"], xv, dtype=x.dtype).reshape(b, t, h, hd)
+    g = jax.nn.silu(nn.dense(p["wg"], xg, dtype=x.dtype))
+    decay = p["decay_base"][None, None] + nn.dense(
+        p["decay_lora_b"],
+        jnp.tanh(nn.dense(p["decay_lora_a"], xw, dtype=jnp.float32)),
+        dtype=jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, h, hd)             # in (0, 1)
+
+    q_ = r.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    k_ = k.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    v_ = v.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    w_ = w.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    u = p["u_bonus"].reshape(h, hd)  # current-token bonus per channel
+    s0 = wkv_state.reshape(b * h, hd, hd) if wkv_state is not None else None
+
+    # per-head u: fold u into the scan by head -> loop over heads is wasteful;
+    # instead scan with u broadcast via batch trick: reshape so the head axis
+    # rides the batch axis and u differs per batch row.  ops.gated_linear_scan
+    # takes a single (dk,) u, so we pass u via the k/v bonus identity:
+    #   o_t = r (S_{t-1} + diag(u_h) k v^T)  ==  scan(u=0) + (r . (u_h*k)) v
+    o, s_fin = kops.gated_linear_scan(
+        q_, k_, v_, w_, None, s0, decay_before_read=False,
+        impl=cfg.scan_impl, chunk=cfg.scan_chunk, unroll=cfg.unroll_scans)
+    u_bh = jnp.repeat(u[None], b, axis=0).reshape(b * h, 1, hd)
+    bonus = jnp.sum(q_ * (u_bh * k_), axis=-1, keepdims=True) * v_
+    o = o + bonus
+
+    o = o.reshape(b, h, t, hd).transpose(0, 2, 1, 3)              # (B,T,H,hd)
+    o = nn.layernorm(p["out_norm"], o)                            # group norm
+    o = (o.reshape(b, t, d) * g).astype(x.dtype)
+    out = nn.dense(p["wo"], o, dtype=x.dtype)
+    shift_dtype = shift.dtype if shift is not None else x.dtype
+    return out, s_fin.reshape(b, h, hd, hd), x[:, -1].astype(shift_dtype)
+
+
+def channel_mix(p: dict, cfg: ArchConfig, x: jax.Array,
+                shift: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """RWKV channel mixing (squared-ReLU MLP with receptance gate)."""
+    xs = _token_shift(x, shift)
+    xk = x + p["mix_k"].astype(x.dtype) * (xs - x)
+    xr = x + p["mix_r"].astype(x.dtype) * (xs - x)
+    kk = jnp.square(jax.nn.relu(nn.dense(p["wk"], xk, dtype=x.dtype)))
+    vv = nn.dense(p["wv"], kk, dtype=x.dtype)
+    r = jax.nn.sigmoid(nn.dense(p["wr"], xr, dtype=x.dtype))
+    shift_dtype = shift.dtype if shift is not None else x.dtype
+    return r * vv, x[:, -1].astype(shift_dtype)

@@ -1,0 +1,153 @@
+"""Mamba-2-style selective SSM head mixer (hymba-1.5b's SSM branch).
+
+Multi-head gated linear recurrence (the Mamba-2 "state space duality" form):
+per head h with head dim P and state size N,
+
+    S_t = exp(-softplus(a_h) * dt_t) * S_{t-1} + dt_t * B_t x_t^T     (N, P)
+    y_t = C_t @ S_t + D_h * x_t
+
+i.e. a gated-linear-attention read with q=C, k=B*dt, data-dependent scalar-
+per-head decay w_t = exp(-softplus(a) dt_t) broadcast over the N axis, plus
+a skip D and an output gate z (SiLU).  The sequential dependence runs
+through kernels.ops.gated_linear_scan (decay_before_read=True), the
+chunk-parallel Pallas kernel / jnp reference pair — which is what makes the
+long_500k cells O(T) with O(1) state.
+
+The depthwise causal conv (width d_conv) matches Mamba's local mixing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+from ..kernels import ops as kops
+from ..parallel import sharding
+from .config import ArchConfig
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_heads, head_dim, d_inner) of the SSM branch."""
+    return cfg.n_heads, cfg.hd, cfg.n_heads * cfg.hd
+
+
+def init(key: jax.Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h, p, d_in = _dims(cfg)
+    n = cfg.ssm_state
+    kx, kb, kc, kdt, kz, ko, kconv = jax.random.split(key, 7)
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "wx": {"w": scale * jax.random.normal(kx, (d, d_in), jnp.float32)},
+        "wz": {"w": scale * jax.random.normal(kz, (d, d_in), jnp.float32)},
+        "wb": {"w": scale * jax.random.normal(kb, (d, h * n), jnp.float32)},
+        "wc": {"w": scale * jax.random.normal(kc, (d, h * n), jnp.float32)},
+        "wdt": {"w": scale * jax.random.normal(kdt, (d, h), jnp.float32),
+                "b": jnp.asarray(
+                    np.log(np.expm1(np.geomspace(1e-3, 0.1, h))), jnp.float32)},
+        "a_log": jnp.zeros((h,), jnp.float32),   # softplus(a)=log1p(e^0)~0.69
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "conv": {"w": (1.0 / np.sqrt(cfg.d_conv)) *
+                 jax.random.normal(kconv, (cfg.d_conv, d_in), jnp.float32)},
+        "wo": {"w": (1.0 / np.sqrt(d_in)) *
+               jax.random.normal(ko, (d_in, d), jnp.float32)},
+    }
+
+
+def axes(cfg: ArchConfig) -> dict:
+    return {
+        "wx": {"w": ("embed", "heads")},
+        "wz": {"w": ("embed", "heads")},
+        "wb": {"w": ("embed", "heads")},
+        "wc": {"w": ("embed", "heads")},
+        "wdt": {"w": ("embed", "heads"), "b": ("heads",)},
+        "a_log": ("heads",),
+        "d_skip": ("heads",),
+        "conv": {"w": (None, "heads")},
+        "wo": {"w": ("heads", "embed")},
+    }
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    """Decode-time carry: SSM state + conv tail."""
+    h, p, d_in = _dims(cfg)
+    return {
+        "s": jnp.zeros((batch, h, cfg.ssm_state, p), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+    }
+
+
+def state_axes() -> dict:
+    return {"s": ("batch", "heads", None, None),
+            "conv": ("batch", None, "heads")}
+
+
+def _causal_conv(p: dict, x: jax.Array, tail: jax.Array | None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along seq.  x: (B, T, D_in).  Returns
+    (conv(x), new_tail (B, d_conv-1, D_in))."""
+    w = p["w"].astype(x.dtype)  # (K, D_in)
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_tail = xp[:, xp.shape[1] - (k - 1):, :]
+    return out, new_tail
+
+
+def _branch_inputs(params: dict, cfg: ArchConfig, x: jax.Array,
+                   conv_tail: jax.Array | None):
+    """Shared pre-scan computation.  x: (B, T, D)."""
+    b, t, _ = x.shape
+    h, pdim, d_in = _dims(cfg)
+    n = cfg.ssm_state
+    xin = nn.dense(params["wx"], x, dtype=x.dtype)
+    xin, new_tail = _causal_conv(params["conv"], xin, conv_tail)
+    xin = jax.nn.silu(xin)
+    z = jax.nn.silu(nn.dense(params["wz"], x, dtype=x.dtype))
+    bmat = nn.dense(params["wb"], x, dtype=x.dtype).reshape(b, t, h, n)
+    cmat = nn.dense(params["wc"], x, dtype=x.dtype).reshape(b, t, h, n)
+    dt = jax.nn.softplus(
+        nn.dense(params["wdt"], x, dtype=jnp.float32).astype(jnp.float32))
+    a = jax.nn.softplus(params["a_log"])[None, None, :]          # (1,1,H)
+    w = jnp.exp(-a * dt)                                          # (B,T,H)
+    xv = xin.reshape(b, t, h, pdim)
+    return xv, z, bmat, cmat, dt, w, new_tail
+
+
+def apply_seq(params: dict, cfg: ArchConfig, x: jax.Array,
+              state: dict | None = None) -> tuple[jax.Array, dict]:
+    """Full-sequence SSM mixing.  x: (B, T, D) -> (out, new_state)."""
+    b, t, _ = x.shape
+    h, pdim, d_in = _dims(cfg)
+    n = cfg.ssm_state
+    conv_tail = state["conv"] if state is not None else None
+    s0 = state["s"] if state is not None else None
+    xv, z, bmat, cmat, dt, w, new_tail = _branch_inputs(params, cfg, x, conv_tail)
+
+    # per-head gated linear scan: q=C, k=dt*B, v=x, decay w broadcast over N
+    q = cmat.transpose(0, 2, 1, 3).reshape(b * h, t, n)
+    k = (bmat * dt[..., None]).transpose(0, 2, 1, 3).reshape(b * h, t, n)
+    v = xv.transpose(0, 2, 1, 3).reshape(b * h, t, pdim)
+    wfull = jnp.broadcast_to(w.transpose(0, 2, 1)[..., None],
+                             (b, h, t, n)).reshape(b * h, t, n)
+    s0_flat = s0.reshape(b * h, n, pdim) if s0 is not None else None
+    o, s_fin = kops.gated_linear_scan(
+        q, k, v, wfull, None, s0_flat, decay_before_read=True,
+        impl=cfg.scan_impl, chunk=cfg.scan_chunk, unroll=cfg.unroll_scans)
+    o = o.reshape(b, h, t, pdim).transpose(0, 2, 1, 3)
+    o = o + params["d_skip"][None, None, :, None] * xv
+    o = (o.reshape(b, t, d_in) * z).astype(x.dtype)
+    out = nn.dense(params["wo"], o, dtype=x.dtype)
+    tail_dtype = state["conv"].dtype if state is not None else x.dtype
+    new_state = {"s": s_fin.reshape(b, h, n, pdim),
+                 "conv": new_tail.astype(tail_dtype)}
+    return out, new_state
+
+
+def apply_step(params: dict, cfg: ArchConfig, x: jax.Array, state: dict
+               ) -> tuple[jax.Array, dict]:
+    """Single-token decode step.  x: (B, 1, D)."""
+    return apply_seq(params, cfg, x, state)

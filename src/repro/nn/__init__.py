@@ -1,0 +1,46 @@
+"""Minimal functional neural-network layer library.
+
+No flax/haiku offline — this is a deliberately small, explicit pytree-of-dicts
+parameter system.  Every layer is a pair of pure functions:
+
+    params = layer.init(key, ...)        # pytree of jnp arrays
+    out    = layer.apply(params, x, ...)
+
+Parameters are stored in float32 ("master" precision); compute-dtype casting
+is the caller's concern (see models/transformer.py).
+"""
+from .layers import (
+    Initializer,
+    conv3d,
+    conv3d_init,
+    dense,
+    dense_init,
+    embedding_init,
+    layernorm,
+    layernorm_init,
+    lecun_normal,
+    normal_init,
+    param_count,
+    rmsnorm,
+    rmsnorm_init,
+    truncated_normal,
+    zeros_init,
+)
+
+__all__ = [
+    "Initializer",
+    "dense",
+    "dense_init",
+    "conv3d",
+    "conv3d_init",
+    "embedding_init",
+    "layernorm",
+    "layernorm_init",
+    "rmsnorm",
+    "rmsnorm_init",
+    "lecun_normal",
+    "normal_init",
+    "truncated_normal",
+    "zeros_init",
+    "param_count",
+]

@@ -1,0 +1,139 @@
+"""Functional layers: dense, conv3d, norms, embeddings, initializers."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = Callable[[jax.Array, tuple[int, ...]], jax.Array]
+
+
+# --- initializers ----------------------------------------------------------
+def lecun_normal(fan_in_axes: tuple[int, ...] = (-2,)) -> Initializer:
+    def init(key, shape):
+        fan_in = int(np.prod([shape[a] for a in fan_in_axes]))
+        return jax.random.normal(key, shape, jnp.float32) / np.sqrt(max(fan_in, 1))
+
+    return init
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    def init(key, shape):
+        return stddev * jax.random.normal(key, shape, jnp.float32)
+
+    return init
+
+
+def truncated_normal(stddev: float = 0.02) -> Initializer:
+    def init(key, shape):
+        return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+    return init
+
+
+def zeros_init() -> Initializer:
+    def init(key, shape):
+        return jnp.zeros(shape, jnp.float32)
+
+    return init
+
+
+# --- dense -----------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = True,
+               w_init: Initializer | None = None) -> dict:
+    w_init = w_init or lecun_normal((0,))
+    kw, _ = jax.random.split(key)
+    p = {"w": w_init(kw, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
+    w = p["w"].astype(dtype) if dtype is not None else p["w"]
+    # named for remat policies: saving "gathered_weights" lets the backward
+    # reuse the FSDP all-gather instead of re-issuing it (see §Perf)
+    w = jax.ad_checkpoint.checkpoint_name(w, "gathered_weights")
+    y = x @ w
+    if "b" in p:
+        b = p["b"].astype(y.dtype)
+        y = y + b
+    return y
+
+
+# --- conv3d ------------------------------------------------------------------
+def conv3d_init(key, k: int, c_in: int, c_out: int, *, bias: bool = True) -> dict:
+    fan_in = k * k * k * c_in
+    kw, _ = jax.random.split(key)
+    # He-normal (ReLU net in the policy)
+    w = jax.random.normal(kw, (k, k, k, c_in, c_out), jnp.float32)
+    w = w * np.sqrt(2.0 / fan_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), jnp.float32)
+    return p
+
+
+def conv3d(p: dict, x: jax.Array, *, padding: str = "VALID") -> jax.Array:
+    """x: (..., D, H, W, C).  Flattens leading axes to one batch axis."""
+    batch = x.shape[:-4]
+    x2 = x.reshape((-1,) + x.shape[-4:])
+    y = jax.lax.conv_general_dilated(
+        x2,
+        p["w"].astype(x.dtype),
+        window_strides=(1, 1, 1),
+        padding=padding,
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y.reshape(batch + y.shape[1:])
+
+
+# --- norms -------------------------------------------------------------------
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, *, eps: float = 1e-6,
+            scale_plus_one: bool = False) -> jax.Array:
+    """RMSNorm in f32, cast back to input dtype (gemma uses (1+scale))."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = p["scale"] + 1.0 if scale_plus_one else p["scale"]
+    return (x * scale).astype(dt)
+
+
+def layernorm_init(d: int, *, bias: bool = True) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if bias:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def layernorm(p: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    x = x * p["scale"]
+    if "bias" in p:
+        x = x + p["bias"]
+    return x.astype(dt)
+
+
+# --- embedding ---------------------------------------------------------------
+def embedding_init(key, vocab: int, d: int, *, stddev: float | None = None) -> dict:
+    stddev = 1.0 / np.sqrt(d) if stddev is None else stddev
+    return {"table": stddev * jax.random.normal(key, (vocab, d), jnp.float32)}
+
+
+# --- utilities ---------------------------------------------------------------
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

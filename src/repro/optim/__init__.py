@@ -1,0 +1,14 @@
+"""Sharded-friendly optimizers (pure pytree transforms, no optax offline)."""
+from .adam import AdamConfig, adam_init, adam_update, global_norm, clip_by_global_norm
+from .schedules import constant_schedule, cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamConfig",
+    "adam_init",
+    "adam_update",
+    "global_norm",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,20 @@
+"""Distribution primitives: logical-axis sharding rules and mesh helpers."""
+from .sharding import (
+    AxisRules,
+    axis_rules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+    named_sharding,
+    param_specs,
+)
+
+__all__ = [
+    "AxisRules",
+    "axis_rules",
+    "constrain",
+    "current_rules",
+    "logical_to_spec",
+    "named_sharding",
+    "param_specs",
+]

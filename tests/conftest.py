@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device — the 512-device override belongs
+# ONLY to launch/dryrun.py (see the brief).  Keep allocation deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_enable_fast_math=false")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,209 @@
+"""CFD substrate physics tests: DG operators, NS solver invariants, spectra."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import dgsem, equations, initial, solver, spectra
+from repro.cfd.dgsem import DGParams
+from repro.cfd.solver import HITConfig
+
+CFG = HITConfig(n_poly=3, n_elem=2, k_max=3, alpha=0.4, t_end=0.2, dt_rl=0.1,
+                k_peak=2.0, k_eta=8.0)
+
+
+# --- GLL / DG operators -------------------------------------------------------
+def test_gll_weights_integrate_constants():
+    from repro.cfd import gll
+    for n in (1, 3, 5, 7):
+        x, w = gll.gll_nodes_weights(n)
+        assert np.isclose(np.sum(w), 2.0)
+        # GLL rule integrates polynomials up to degree 2n-1 exactly
+        for deg in range(2 * n - 1):
+            exact = (1 - (-1) ** (deg + 1)) / (deg + 1)
+            assert np.isclose(np.sum(w * x**deg), exact, atol=1e-12), deg
+
+
+def test_derivative_matrix_polynomial_exactness():
+    from repro.cfd import gll
+    n = 5
+    x, _ = gll.gll_nodes_weights(n)
+    d = gll.lagrange_derivative_matrix(n)
+    for deg in range(n + 1):
+        np.testing.assert_allclose(d @ x**deg,
+                                   deg * x ** max(deg - 1, 0) if deg else 0 * x,
+                                   atol=1e-10)
+
+
+def test_dg_gradient_of_linear_field():
+    """The DG gradient of a (periodic-compatible) trig field converges;
+    for a field constant along a direction the gradient is ~0 there."""
+    dg = DGParams(4, 3)
+    ops = {"D": jnp.asarray(dg.deriv_matrix(), jnp.float32)}
+    _, w = dg.nodes_weights()
+    inv_w = (float(1.0 / w[0]), float(1.0 / w[-1]))
+    coords = dg.node_coords()  # (K, n)
+    x = jnp.asarray(coords)[:, None, None, :, None, None]
+    x = jnp.broadcast_to(x, (3, 3, 3, 5, 5, 5))[..., None]
+    q = jnp.sin(x)  # varies along direction 0 only
+    grad = dgsem.dg_gradient(q, dg, ops["D"], inv_w)
+    # direction 0: N=4 interpolation of sin over 2pi/3 elements -> ~1e-2
+    np.testing.assert_allclose(np.asarray(grad[..., 0, 0]),
+                               np.asarray(jnp.cos(x)[..., 0]), atol=2e-2)
+    np.testing.assert_allclose(np.asarray(grad[..., 0, 1]), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(grad[..., 0, 2]), 0.0, atol=1e-4)
+
+
+# --- solver invariants -----------------------------------------------------------
+def _uniform_state(cfg, vel=(0.3, -0.2, 0.1)):
+    dg = cfg.dg
+    n = cfg.n_poly + 1
+    shape = (cfg.n_elem,) * 3 + (n,) * 3
+    rho = jnp.full(shape, cfg.rho0, jnp.float32)
+    v = jnp.broadcast_to(jnp.asarray(vel, jnp.float32), shape + (3,))
+    p = jnp.full(shape, cfg.p0, jnp.float32)
+    return equations.primitive_to_conservative(rho, v, p)
+
+
+def test_free_stream_preservation():
+    """A uniform flow must stay exactly uniform (well-balancedness)."""
+    u0 = _uniform_state(CFG)
+    cs = 0.1 * jnp.ones((CFG.n_elem,) * 3, jnp.float32)
+    u1 = solver.advance_rl_interval(u0, cs, CFG)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_conservation_without_forcing():
+    """Mass and momentum means are conserved by the DG divergence."""
+    cfg = dataclasses.replace(CFG, forcing_a0=0.0)
+    u0 = initial.sample_initial_state(jax.random.PRNGKey(0), cfg)
+    cs = 0.17 * jnp.ones((cfg.n_elem,) * 3, jnp.float32)
+    u1 = solver.advance_rl_interval(u0, cs, cfg)
+    m0 = dgsem.quadrature_mean(u0, cfg.dg)
+    m1 = dgsem.quadrature_mean(u1, cfg.dg)
+    np.testing.assert_allclose(float(m1[0]), float(m0[0]), rtol=1e-6)  # mass
+    np.testing.assert_allclose(np.asarray(m1[1:4]), np.asarray(m0[1:4]),
+                               atol=1e-6)  # momentum
+def test_energy_decays_without_forcing():
+    """Viscosity + SGS must drain kinetic energy in decaying HIT."""
+    cfg = dataclasses.replace(CFG, forcing_a0=0.0)
+    u0 = initial.sample_initial_state(jax.random.PRNGKey(1), cfg)
+    cs = 0.17 * jnp.ones((cfg.n_elem,) * 3, jnp.float32)
+    u1 = solver.advance_rl_interval(u0, cs, cfg)
+
+    def ke(u):
+        rho, vel, _, _ = equations.conservative_to_primitive(u)
+        e = 0.5 * rho * jnp.sum(vel**2, -1)
+        return float(dgsem.quadrature_mean(e[..., None], cfg.dg)[0])
+
+    assert ke(u1) < ke(u0)
+
+
+def test_solver_stability_many_steps():
+    u = initial.sample_initial_state(jax.random.PRNGKey(2), CFG)
+    cs = 0.1 * jnp.ones((CFG.n_elem,) * 3, jnp.float32)
+    for _ in range(3):
+        u = solver.advance_rl_interval(u, cs, CFG)
+    assert bool(jnp.all(jnp.isfinite(u)))
+
+
+# --- initial states / spectra -------------------------------------------------------
+def test_initial_state_divergence_free():
+    """The Rogallo sampler's velocity is solenoidal (spectral check)."""
+    n = 16
+    n_shells = spectra._shell_bins(n)[1]
+    e_target = jnp.asarray(
+        spectra.vkp_spectrum(np.arange(n_shells), 1.0, 3.0, 7.0), jnp.float32)
+    vel = initial._solenoidal_spectral_field(jax.random.PRNGKey(3), n, e_target)
+    vhat = jnp.fft.rfftn(vel, axes=(0, 1, 2))
+    k1 = np.fft.fftfreq(n, 1.0 / n)
+    kr = np.fft.rfftfreq(n, 1.0 / n)
+    kx, ky, kz = np.meshgrid(k1, k1, kr, indexing="ij")
+    div = (vhat[..., 0] * kx + vhat[..., 1] * ky + vhat[..., 2] * kz)
+    denom = np.sqrt(np.mean(np.abs(vhat) ** 2)) * np.sqrt((kx**2+ky**2+kz**2).mean())
+    assert float(jnp.max(jnp.abs(div))) / max(denom, 1e-30) < 1e-4
+
+
+def test_initial_state_matches_target_spectrum():
+    """At the paper's 24-DOF resolution the sampled state reproduces the
+    target spectrum away from the grid cutoff (GLL interpolation loses a few
+    % near Nyquist — the same filtering a real LES restriction applies)."""
+    cfg = HITConfig(n_poly=5, n_elem=4, k_max=9)  # paper 24 DOF
+    u = initial.sample_initial_state(jax.random.PRNGKey(4), cfg)
+    e_les = spectra.les_spectrum(u, cfg)
+    e_ref = spectra.reference_spectrum(cfg)
+    sl = slice(1, 7)
+    np.testing.assert_allclose(np.asarray(e_les)[sl], e_ref[sl], rtol=0.2)
+
+
+def test_energy_spectrum_single_mode():
+    """A pure k=2 Fourier mode lands all its energy in shell 2."""
+    n = 16
+    x = np.arange(n) * 2 * np.pi / n
+    vel = np.zeros((n, n, n, 3), np.float32)
+    vel[..., 1] = np.sin(2 * x)[:, None, None]  # v_y(x): div-free
+    spec = np.asarray(spectra.energy_spectrum(jnp.asarray(vel)))
+    assert np.argmax(spec) == 2
+    np.testing.assert_allclose(spec.sum(), 0.5 * np.mean(vel**2) * 3, rtol=1e-5)
+    np.testing.assert_allclose(spec[2], spec.sum(), rtol=1e-5)
+
+
+def test_nodal_uniform_roundtrip():
+    """Low-mode field: corner-grid samples -> GLL (exact Fourier eval) ->
+    CELL-CENTERED uniform grid (polynomial interpolation).  The output grid
+    is offset half a cell from the input grid (nodal_to_uniform emits the
+    FFT-ready center grid), so compare against the analytic field evaluated
+    at the centers, to polynomial-interpolation accuracy."""
+    cfg = HITConfig(n_poly=5, n_elem=4)  # 24^3: degree-5 over pi/2 elements
+    n_grid = cfg.dg.n_dof_dir
+
+    def field(x, y, z):
+        return np.cos(x) + 0.5 * np.sin(y + 0.3) * np.cos(2 * z)
+
+    x = np.arange(n_grid) * 2 * np.pi / n_grid
+    xx, yy, zz = np.meshgrid(x, x, x, indexing="ij")
+    f = jnp.asarray(field(xx, yy, zz)[..., None], jnp.float32)
+    nodal = initial.uniform_to_gll(f, cfg)
+    back = spectra.nodal_to_uniform(nodal, cfg.dg)
+    xc = (np.arange(n_grid) + 0.5) * 2 * np.pi / n_grid
+    xxc, yyc, zzc = np.meshgrid(xc, xc, xc, indexing="ij")
+    want = field(xxc, yyc, zzc)[..., None]
+    # degree-5 interpolation of the k=2 mode over pi/2 elements: ~1e-3
+    np.testing.assert_allclose(np.asarray(back), want, atol=5e-3)
+
+
+def test_env_blowup_guard():
+    """A non-finite solver state must revert the transition and floor the
+    reward at -1 (in-graph fault tolerance; see env.step docstring)."""
+    from repro.cfd import env as env_lib
+    cfg = CFG
+    e_dns = jnp.asarray(spectra.reference_spectrum(cfg), jnp.float32)
+    u0 = initial.sample_initial_state(jax.random.PRNGKey(7), cfg)
+    # poison the state so ANY advance produces NaN
+    u_bad = u0.at[0, 0, 0, 0, 0, 0, 0].set(jnp.nan)
+    state = env_lib.EnvState(u=u_bad, t_step=jnp.zeros((), jnp.int32))
+    action = 0.1 * jnp.ones((cfg.n_elem**3,), jnp.float32)
+    res = jax.jit(lambda s, a: env_lib.step(s, a, cfg, e_dns))(state, action)
+    assert float(res.reward) == -1.0
+    # the carried state is the (reverted) pre-step state, not NaN...
+    np.testing.assert_array_equal(np.asarray(res.state.u), np.asarray(u_bad))
+    # ...and a healthy state is untouched by the guard
+    state_ok = env_lib.EnvState(u=u0, t_step=jnp.zeros((), jnp.int32))
+    res_ok = jax.jit(lambda s, a: env_lib.step(s, a, cfg, e_dns))(state_ok,
+                                                                 action)
+    assert bool(jnp.isfinite(res_ok.reward))
+    assert bool(jnp.all(jnp.isfinite(res_ok.state.u)))
+
+
+# --- reward ---------------------------------------------------------------------------
+def test_reward_bounds_and_perfect_match():
+    e = jnp.asarray(spectra.reference_spectrum(CFG), jnp.float32)
+    ell = spectra.spectral_error(e, e, CFG.k_max)
+    assert float(ell) == 0.0
+    assert float(spectra.reward_from_error(ell, CFG.alpha)) == pytest.approx(1.0)
+    bad = spectra.spectral_error(2.0 * e, e, CFG.k_max)
+    r = float(spectra.reward_from_error(bad, CFG.alpha))
+    assert -1.0 <= r < 1.0

@@ -1,0 +1,160 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.dg_derivative import dg_derivative3
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.linear_scan import linear_scan
+from repro.kernels.smagorinsky import smagorinsky_nut
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-5)
+
+
+# --- flash attention ------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,causal,window,softcap",
+    [
+        (2, 4, 4, 64, 64, 32, True, None, None),      # MHA causal
+        (1, 8, 2, 48, 48, 16, True, None, None),      # GQA, non-pow2 seq
+        (2, 4, 2, 32, 32, 32, True, 8, None),         # sliding window
+        (1, 4, 4, 32, 32, 16, True, None, 20.0),      # softcap (gemma-2)
+        (2, 4, 2, 1, 96, 32, True, None, None),       # decode: q at the end
+        (1, 2, 1, 16, 80, 16, True, 24, None),        # decode chunk + window
+        (2, 4, 4, 64, 64, 64, False, None, None),     # bidirectional (whisper)
+    ],
+)
+def test_flash_attention_vs_ref(b, hq, hkv, sq, skv, d, causal, window,
+                                softcap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=16, block_k=32,
+                          interpret=True)
+    want = ref.mha(q, k, v, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_matches_chunked_ref():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 4, 40, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 2, 40, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 2, 40, 32), jnp.float32)
+    a = ref.mha_chunked(q, k, v, causal=True, block_k=16)
+    b_ = ref.mha(q, k, v, causal=True)
+    np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-5)
+
+
+# --- gated linear recurrence -----------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("decay_before_read", [False, True])
+@pytest.mark.parametrize(
+    "b,t,dk,dv,chunk,with_u,with_s0",
+    [
+        (2, 32, 16, 16, 8, True, False),
+        (1, 40, 8, 24, 16, False, True),   # t % chunk != 0 (padding)
+        (3, 16, 32, 8, 64, True, True),    # chunk > t
+    ],
+)
+def test_linear_scan_vs_ref(b, t, dk, dv, chunk, with_u, with_s0,
+                            decay_before_read, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    q = jax.random.normal(ks[0], (b, t, dk), dtype)
+    k = jax.random.normal(ks[1], (b, t, dk), dtype)
+    v = jax.random.normal(ks[2], (b, t, dv), dtype)
+    w = jax.random.uniform(ks[3], (b, t, dk), jnp.float32,
+                           minval=0.5, maxval=0.999).astype(dtype)
+    u = (0.3 * jax.random.normal(ks[4], (dk,), dtype)) if with_u else None
+    s0 = (jax.random.normal(ks[5], (b, dk, dv), jnp.float32)
+          if with_s0 else None)
+    o, s = linear_scan(q, k, v, w, u, s0,
+                       decay_before_read=decay_before_read, chunk=chunk,
+                       interpret=True)
+    o_ref, s_ref = ref.linear_scan(q, k, v, w, u, s0,
+                                   decay_before_read=decay_before_read)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 2e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_linear_scan_chunked_ref_matches_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (2, 37, 8), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 37, 8), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 37, 12), jnp.float32)
+    w = jax.random.uniform(ks[3], (2, 37, 8), minval=0.6, maxval=0.999)
+    for dbr in (False, True):
+        o1, s1 = ref.linear_scan_chunked(q, k, v, w, None, None,
+                                         decay_before_read=dbr, chunk=8)
+        o2, s2 = ref.linear_scan(q, k, v, w, None, None,
+                                 decay_before_read=dbr)
+        np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-5)
+
+
+def test_linear_scan_state_chaining():
+    """Running two halves with carried state == one full run."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    b, t, dk, dv = 1, 32, 8, 8
+    q = jax.random.normal(ks[0], (b, t, dk))
+    k = jax.random.normal(ks[1], (b, t, dk))
+    v = jax.random.normal(ks[2], (b, t, dv))
+    w = jax.random.uniform(ks[3], (b, t, dk), minval=0.7, maxval=0.99)
+    o_full, s_full = ref.linear_scan(q, k, v, w)
+    o1, s1 = ref.linear_scan_chunked(q[:, :16], k[:, :16], v[:, :16],
+                                     w[:, :16], chunk=8)
+    o2, s2 = ref.linear_scan_chunked(q[:, 16:], k[:, 16:], v[:, 16:],
+                                     w[:, 16:], s0=s1, chunk=8)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), o_full,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(s2, s_full, rtol=1e-4, atol=1e-5)
+
+
+# --- dg derivative ----------------------------------------------------------------
+@pytest.mark.parametrize("n,c,b,block_b", [(4, 5, 16, 8), (6, 3, 10, 4),
+                                           (8, 1, 7, 16)])
+def test_dg_derivative3_vs_ref(n, c, b, block_b):
+    key = jax.random.PRNGKey(5)
+    u = jax.random.normal(key, (b, n, n, n, c), jnp.float32)
+    d = jax.random.normal(jax.random.PRNGKey(6), (n, n), jnp.float32)
+    outs = dg_derivative3(u, d, block_b=block_b, interpret=True)
+    wants = ref.dg_derivative3(u, d)
+    for o, w in zip(outs, wants):
+        np.testing.assert_allclose(o, w, rtol=2e-4, atol=1e-5)
+
+
+# --- smagorinsky -------------------------------------------------------------------
+@pytest.mark.parametrize("p,block_p", [(17, 8), (2048, 512), (64, 128)])
+def test_smagorinsky_vs_ref(p, block_p):
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    grad_v = jax.random.normal(ks[0], (p, 3, 3), jnp.float32)
+    cs = jax.random.uniform(ks[1], (p,), minval=0.0, maxval=0.5)
+    out = smagorinsky_nut(grad_v, cs, 0.1, block_p=block_p, interpret=True)
+    want = ref.smagorinsky_nut(grad_v, cs, 0.1)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=1e-7)
+
+
+def test_ops_dispatch_gradients():
+    """The chunked impls are differentiable end-to-end (training path)."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (1, 2, 16, 8))
+    k = jax.random.normal(ks[1], (1, 1, 16, 8))
+    v = jax.random.normal(ks[2], (1, 1, 16, 8))
+
+    def f(q):
+        return jnp.sum(ops.attention(q, k, v, impl="chunked", block_k=8))
+
+    g = jax.grad(f)(q)
+    assert g.shape == q.shape and bool(jnp.all(jnp.isfinite(g)))

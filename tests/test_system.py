@@ -1,0 +1,84 @@
+"""System-level integration tests: the paper's full loop end to end."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import relexi_hit
+from repro.core.orchestrator import FleetConfig, Orchestrator
+from repro.core.ppo import PPOConfig
+from repro.core.runner import Runner, RunnerConfig
+
+
+def test_full_rl_training_loop(tmp_path):
+    """Three synchronous PPO iterations: finite metrics, eval runs,
+    checkpoints are written, metrics.jsonl is append-only structured."""
+    env_cfg = relexi_hit.reduced()
+    runner = Runner(
+        env_cfg, FleetConfig(n_envs=2, bank_size=4),
+        ppo_cfg=PPOConfig(),
+        run_cfg=RunnerConfig(n_iterations=3, eval_every=2,
+                             checkpoint_every=2,
+                             checkpoint_dir=str(tmp_path / "rl"),
+                             async_checkpoint=False),
+    )
+    history = runner.train()
+    assert len(history) == 3
+    for rec in history:
+        assert np.isfinite(rec["return_norm"])
+        assert np.isfinite(rec["ppo/loss"])
+        assert -1.0 <= rec["return_norm"] <= 1.0  # reward bounds propagate
+    assert any("eval_return_norm" in r for r in history)
+    lines = [json.loads(l) for l in open(runner.metrics_path)]
+    assert len(lines) >= 3
+    assert os.path.isdir(os.path.join(str(tmp_path / "rl")))
+
+
+def test_reward_improves_with_good_actions():
+    """Sanity: against the synthetic DNS target, a reasonable constant C_s
+    beats an absurd one — the reward surface the agent climbs is real."""
+    from repro.cfd import env as env_lib
+    env_cfg = relexi_hit.reduced()
+    orch = Orchestrator(env_cfg, FleetConfig(n_envs=1, bank_size=3))
+    u0 = orch.test_state()
+
+    def episode_return(cs_val):
+        state = env_lib.EnvState(u=u0, t_step=jnp.zeros((1,), jnp.int32))
+        action = jnp.full((1, env_cfg.n_elem**3), cs_val, jnp.float32)
+        step = jax.jit(lambda s, a: env_lib.step(s, a, env_cfg, orch.e_dns))
+        tot = 0.0
+        for _ in range(env_cfg.n_actions):
+            res = step(state, action)
+            state = res.state
+            tot += float(res.reward[0])
+        return tot
+
+    # an over-dissipative model (C_s = 0.5 everywhere) must score worse
+    # than a moderate one on the spectral reward
+    assert episode_return(0.1) > episode_return(0.5)
+
+
+def test_lm_and_rl_share_substrate(tmp_path):
+    """The same checkpoint/optimizer/data machinery drives both the paper's
+    RL loop and the assigned-architecture LM training (DESIGN.md §5)."""
+    from repro import configs, optim
+    from repro.core import checkpoints
+    from repro.data import TokenStream
+    from repro.models import api
+    cfg = configs.get_reduced("rwkv6-1.6b")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adam_init(params)
+    stream = TokenStream(cfg, 2, 32)
+    step = jax.jit(lambda p, o, b: api.train_step(p, o, b, cfg))
+    batch = stream.next()  # fixed batch: loss must descend deterministically
+    losses = []
+    for _ in range(4):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]
+    d = str(tmp_path / "lm")
+    checkpoints.save(d, 3, {"params": jax.device_get(params)})
+    assert checkpoints.latest_step(d) == 3
