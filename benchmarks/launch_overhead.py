@@ -20,20 +20,17 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import relexi_hit
+from repro import envs
 from repro.core import policy as policy_lib, rollout as rollout_lib
-from repro.cfd import initial, spectra
 
 from . import common
 
 
 def run(quick: bool = True) -> dict:
-    env_cfg = relexi_hit.reduced()
-    pcfg = policy_lib.PolicyConfig(n_nodes=env_cfg.n_poly + 1,
-                                   cs_max=env_cfg.cs_max)
+    env = envs.make("hit_les_reduced")
+    pcfg = policy_lib.PolicyConfig.from_specs(env.obs_spec, env.action_spec)
     params = policy_lib.init(jax.random.PRNGKey(0), pcfg)
-    e_dns = jnp.asarray(spectra.reference_spectrum(env_cfg), jnp.float32)
-    bank = initial.make_state_bank(jax.random.PRNGKey(1), env_cfg, 9)
+    bank = env.initial_state_bank(jax.random.PRNGKey(1), 9)
 
     rows = []
     common.row("# sec3.3_launch_overhead", "n_envs", "compile_s",
@@ -42,7 +39,7 @@ def run(quick: bool = True) -> dict:
         u0 = jnp.take(bank, jnp.arange(n) % 8, axis=0)
 
         def step_once(p, u, k):
-            return rollout_lib.rollout(p, pcfg, env_cfg, e_dns, u, k)
+            return rollout_lib.rollout(p, pcfg, env, u, k)
 
         fn = jax.jit(step_once)
         t0 = time.perf_counter()

@@ -17,26 +17,22 @@ so this benchmark reports BOTH:
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import relexi_hit
+from repro import envs
 from repro.core import policy as policy_lib, rollout as rollout_lib
-from repro.cfd import initial, spectra
 
 from . import common
 
 
 def run(quick: bool = True) -> dict:
-    env_cfg = relexi_hit.reduced()
-    pcfg = policy_lib.PolicyConfig(n_nodes=env_cfg.n_poly + 1,
-                                   cs_max=env_cfg.cs_max)
+    env = envs.make("hit_les_reduced")
+    pcfg = policy_lib.PolicyConfig.from_specs(env.obs_spec, env.action_spec)
     params = policy_lib.init(jax.random.PRNGKey(0), pcfg)
-    e_dns = jnp.asarray(spectra.reference_spectrum(env_cfg), jnp.float32)
-    bank = initial.make_state_bank(jax.random.PRNGKey(1), env_cfg, 9)
+    bank = env.initial_state_bank(jax.random.PRNGKey(1), 9)
 
     sizes = (1, 2, 4, 8) if quick else (1, 2, 4, 8, 16, 32)
     results = []
@@ -46,8 +42,7 @@ def run(quick: bool = True) -> dict:
     t1 = None
     for n in sizes:
         u0 = jnp.take(bank, jnp.arange(n) % 8, axis=0)
-        fn = jax.jit(lambda p, u, k: rollout_lib.rollout(
-            p, pcfg, env_cfg, e_dns, u, k))
+        fn = jax.jit(lambda p, u, k: rollout_lib.rollout(p, pcfg, env, u, k))
         t = common.timeit(fn, params, u0, jax.random.PRNGKey(2),
                           warmup=1, iters=2)
         if t1 is None:

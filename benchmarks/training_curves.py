@@ -14,44 +14,29 @@ Baselines are one-line configs of the same solver, exactly as in the paper.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import relexi_hit
+from repro import envs
 from repro.core.orchestrator import FleetConfig, Orchestrator
 from repro.core.ppo import PPOConfig
+from repro.core.rollout import constant_action_return
 from repro.core.runner import Runner, RunnerConfig
-from repro.cfd import env as env_lib, spectra
 
 from . import common
 
 
 def constant_cs_return(orch: Orchestrator, cs_value: float) -> float:
     """Episode return of a constant-C_s policy on the held-out test state."""
-    cfg = orch.env_cfg
-    u0 = orch.test_state()
-    state = env_lib.EnvState(u=u0, t_step=jnp.zeros((1,), jnp.int32))
-    action = jnp.full((1, cfg.n_elem**3), cs_value, jnp.float32)
-    total = 0.0
-    for _ in range(cfg.n_actions):
-        res = jax.jit(lambda s, a: env_lib.step(s, a, cfg, orch.e_dns))(
-            state, action)
-        state = res.state
-        total += float(res.reward[0])
-    return total / cfg.n_actions
+    return constant_action_return(orch.env, orch.test_state(), cs_value)
 
 
 def run(quick: bool = True, iterations: int | None = None) -> dict:
-    env_cfg = relexi_hit.reduced()
+    env = envs.make("hit_les_reduced")
     iters = iterations or (12 if quick else 60)
     results = {}
     common.row("# fig5_training", "n_envs", "iteration", "return_norm")
 
     for n_envs in ((2,) if quick else (2, 8)):
         runner = Runner(
-            env_cfg, FleetConfig(n_envs=n_envs, bank_size=max(9, n_envs + 1)),
+            env, FleetConfig(n_envs=n_envs, bank_size=max(9, n_envs + 1)),
             ppo_cfg=PPOConfig(),
             run_cfg=RunnerConfig(n_iterations=iters, eval_every=10**9,
                                  checkpoint_every=10**9,

@@ -1,52 +1,59 @@
-"""Quickstart: the paper's RL-CFD loop in ~40 lines of public API.
+"""Quickstart: the paper's RL-CFD loop through the env registry.
 
-Rolls a fleet of HIT LES environments with the Table-2 Conv3D policy,
-runs one PPO update, and evaluates against the Smagorinsky baseline.
+Any registered scenario — the paper's 3-D HIT-LES or the 1-D Burgers
+control problem — trains through the same ~10 lines:
+
+    from repro import envs
+    from repro.core.orchestrator import FleetConfig
+    from repro.core.runner import Runner, RunnerConfig
+
+    env = envs.make("hit_les_reduced")          # or "burgers_reduced", ...
+    runner = Runner(env, FleetConfig(n_envs=4, bank_size=9))
+    history = runner.train()
+
+This script does exactly that for both scenarios at CPU smoke scale, then
+peeks under the hood: the spec-built policy and one sharded fleet rollout.
 
     PYTHONPATH=src python examples/quickstart.py
+    # (pytest needs no prefix: pyproject.toml sets pythonpath = ["src"])
 """
 import jax
 import jax.numpy as jnp
 
-from repro import optim
-from repro.configs import relexi_hit
-from repro.core import policy, ppo, rollout
-from repro.cfd import initial, spectra
+from repro import envs
+from repro.core import policy, rollout
+from repro.core.orchestrator import FleetConfig
+from repro.core.runner import Runner, RunnerConfig
 
-# 1. Environment: CPU-scale homogeneous isotropic turbulence (the paper's
-#    Table-1 configs are relexi_hit.HIT24 / HIT32).
-env_cfg = relexi_hit.reduced()
-e_dns = jnp.asarray(spectra.reference_spectrum(env_cfg), jnp.float32)
+print("registered environments:", ", ".join(envs.registered()))
 
-# 2. Policy: the paper's Table-2 Conv3D actor-critic (~3.3k parameters).
-pcfg = policy.PolicyConfig(n_nodes=env_cfg.n_poly + 1, cs_max=env_cfg.cs_max)
+# 1. Train BOTH scenarios through the identical runner code path.
+for name in ("hit_les_reduced", "burgers_reduced"):
+    env = envs.make(name)
+    runner = Runner(
+        env, FleetConfig(n_envs=2, bank_size=4),
+        run_cfg=RunnerConfig(n_iterations=3, eval_every=2, checkpoint_every=10,
+                             checkpoint_dir=f"checkpoints/quickstart_{name}",
+                             async_checkpoint=False),
+    )
+    history = runner.train(resume=False)
+    returns = [f"{r['return_norm']:+.3f}" for r in history]
+    print(f"{name}: obs {env.obs_spec.shape} act {env.action_spec.shape} "
+          f"T={env.n_actions} -> returns {' '.join(returns)}")
+
+# 2. Under the hood: the policy heads come from the env's declarative specs
+#    (the paper's Table-2 Conv3D stack for HIT; the same plan in 1-D for
+#    Burgers), and one episode of the whole fleet is ONE jitted scan — the
+#    SmartSim launch/poll loop of the paper collapses into this call.
+env = envs.make("hit_les_reduced")
+pcfg = policy.PolicyConfig.from_specs(env.obs_spec, env.action_spec)
 params = policy.init(jax.random.PRNGKey(0), pcfg)
-print(f"policy parameters: {policy.param_count(params):,} "
-      f"(reduced N={env_cfg.n_poly}; the paper-scale N=5 policy has 3,294 — "
-      f"see tests/test_ppo.py::test_policy_param_count_matches_table2)")
-
-# 3. Sample a fleet of parallel environments (one sharded XLA program —
-#    the SmartSim launch/poll loop of the paper collapses into this call).
-u0 = initial.make_state_bank(jax.random.PRNGKey(1), env_cfg, 4)[:4]
-traj = jax.jit(lambda p, u, k: rollout.rollout(p, pcfg, env_cfg, e_dns, u, k)
+print(f"\npolicy parameters: {policy.param_count(params):,} "
+      f"(paper-scale N=5 has 3,294 — tests/test_ppo.py pins Table 2)")
+u0 = env.initial_state_bank(jax.random.PRNGKey(1), 4)
+traj = jax.jit(lambda p, u, k: rollout.rollout(p, pcfg, env, u, k)
                )(params, u0, jax.random.PRNGKey(2))
 print(f"sampled fleet: T={traj.rewards.shape[0]} steps x "
       f"B={traj.rewards.shape[1]} envs, "
       f"mean return={float(jnp.mean(jnp.sum(traj.rewards, 0))):.3f}")
-
-# 4. One PPO update (paper Sec. 5.3 hyperparameters).
-ppo_cfg = ppo.PPOConfig()
-opt_state = optim.adam_init(params)
-params, opt_state, stats = jax.jit(
-    lambda p, o, t: ppo.update(p, o, ppo_cfg, pcfg, t))(params, opt_state, traj)
-print(f"PPO update: loss={float(stats['loss']):.4f} "
-      f"clip_frac={float(stats['clip_frac']):.3f}")
-
-# 5. Compare one episode of the (single-step-trained) policy with the
-#    static Smagorinsky baseline on a fresh state.
-traj2 = jax.jit(lambda p, u, k: rollout.rollout(p, pcfg, env_cfg, e_dns, u, k,
-                                                deterministic=True)
-                )(params, u0[:1], jax.random.PRNGKey(3))
-print(f"deterministic episode return (RL, 1 update): "
-      f"{float(rollout.normalized_return(traj2)[0]):.3f}")
-print("(train longer with: python -m repro.launch.rl_train --reduced)")
+print("(train longer with: python -m repro.launch.rl_train --env hit_les_24dof)")

@@ -6,24 +6,21 @@ the launch-overhead amortization of the single-program design.
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import relexi_hit
+from repro import envs
 from repro.core import policy, rollout
-from repro.cfd import initial, spectra
 
-env_cfg = relexi_hit.reduced()
-pcfg = policy.PolicyConfig(n_nodes=env_cfg.n_poly + 1, cs_max=env_cfg.cs_max)
+env = envs.make("hit_les_reduced")
+pcfg = policy.PolicyConfig.from_specs(env.obs_spec, env.action_spec)
 params = policy.init(jax.random.PRNGKey(0), pcfg)
-e_dns = jnp.asarray(spectra.reference_spectrum(env_cfg), jnp.float32)
-bank = initial.make_state_bank(jax.random.PRNGKey(1), env_cfg, 9)
+bank = env.initial_state_bank(jax.random.PRNGKey(1), 9)
 
 print(f"{'n_envs':>7} {'compile_s':>10} {'episode_s':>10} {'per_env_s':>10} "
       f"{'speedup':>8}")
 t1 = None
 for n in (1, 2, 4, 8):
-    u0 = jnp.take(bank, jnp.arange(n) % 8, axis=0)
-    fn = jax.jit(lambda p, u, k: rollout.rollout(p, pcfg, env_cfg, e_dns, u, k))
+    u0 = jax.numpy.take(bank, jax.numpy.arange(n) % 8, axis=0)
+    fn = jax.jit(lambda p, u, k: rollout.rollout(p, pcfg, env, u, k))
     t0 = time.perf_counter()
     fn.lower(params, u0, jax.random.PRNGKey(0)).compile()
     t_compile = time.perf_counter() - t0

@@ -9,59 +9,45 @@ dynamic-C_s model against the paper's two baselines.
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import relexi_hit
+from repro import envs
 from repro.core.orchestrator import FleetConfig
 from repro.core.ppo import PPOConfig
+from repro.core.rollout import constant_action_return
 from repro.core.runner import Runner, RunnerConfig
-from repro.cfd import env as env_lib
-
-
-def constant_cs_return(orch, cs_value: float) -> float:
-    cfg = orch.env_cfg
-    u0 = orch.test_state()
-    state = env_lib.EnvState(u=u0, t_step=jnp.zeros((1,), jnp.int32))
-    action = jnp.full((1, cfg.n_elem**3), cs_value, jnp.float32)
-    step = jax.jit(lambda s, a: env_lib.step(s, a, cfg, orch.e_dns))
-    total = 0.0
-    for _ in range(cfg.n_actions):
-        res = step(state, action)
-        state = res.state
-        total += float(res.reward[0])
-    return total / cfg.n_actions
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--env", default="hit_les_reduced",
+                    choices=envs.registered())
     ap.add_argument("--iterations", type=int, default=60)
     ap.add_argument("--n-envs", type=int, default=4)
     ap.add_argument("--checkpoint-dir", default="checkpoints/example_rl")
     args = ap.parse_args()
 
-    env_cfg = relexi_hit.reduced()
     runner = Runner(
-        env_cfg,
+        envs.make(args.env),
         FleetConfig(n_envs=args.n_envs, bank_size=args.n_envs + 5),
         ppo_cfg=PPOConfig(),  # paper Sec. 5.3: gamma .995, lr 1e-4, 5 epochs
         run_cfg=RunnerConfig(n_iterations=args.iterations, eval_every=10,
                              checkpoint_every=20,
                              checkpoint_dir=args.checkpoint_dir),
     )
-    print(f"training {args.iterations} iterations x {args.n_envs} envs ...")
+    print(f"training {args.env}: {args.iterations} iterations x "
+          f"{args.n_envs} envs ...")
     history = runner.train()
     first = next(r["return_norm"] for r in history if "return_norm" in r)
     last = history[-1].get("return_norm", float("nan"))
     print(f"\nreturn (normalized): first={first:.4f} last={last:.4f}")
 
-    rl_eval = float(runner.orch.evaluate(runner.params))
-    smag = constant_cs_return(runner.orch, 0.17)
-    impl = constant_cs_return(runner.orch, 0.0)
+    orch = runner.orch
+    rl_eval = float(orch.evaluate(runner.params))
+    smag = constant_action_return(orch.env, orch.test_state(), 0.17)
+    impl = constant_action_return(orch.env, orch.test_state(), 0.0)
     print("\n=== held-out test state (paper Fig. 5 bottom) ===")
-    print(f"  RL dynamic C_s     : {rl_eval:.4f}")
-    print(f"  Smagorinsky C_s=.17: {smag:.4f}")
-    print(f"  implicit LES C_s=0 : {impl:.4f}")
+    print(f"  RL dynamic coefficient : {rl_eval:.4f}")
+    print(f"  static C=0.17 baseline : {smag:.4f}")
+    print(f"  implicit LES C=0       : {impl:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,274 @@
+"""Forced 1-D viscous Burgers DGSEM — the second RL control scenario.
+
+Burgers turbulence is the classical 1-D testbed for subgrid modeling: an
+under-resolved Burgers LES needs an eddy viscosity to keep the k^-2 shock
+spectrum from piling up at the grid cutoff, exactly the role the Smagorinsky
+C_s plays in the 3-D HIT case.  The RL action here is a per-element
+eddy-viscosity coefficient C with nu_t = (C * Delta)^2 |du/dx| (the 1-D
+Smagorinsky analog); the reward is the same spectral-error metric (paper
+Eqs. 4-5) against a synthetic k^-2 reference spectrum.
+
+The discretization reuses the GLL machinery of the 3-D solver at 1-D:
+
+  * nodal layout u.shape = (..., K, n, 1) — element axis -3, GLL node axis
+    -2, channel axis last; `...` carries the environment batch,
+  * split-form volume terms with the entropy-conservative Burgers two-point
+    flux f#(a, b) = (a^2 + a b + b^2) / 6 (the 1-D counterpart of the
+    Kennedy-Gruber stabilization in solver.py), local Lax-Friedrichs
+    surface fluxes, BR1 central viscous interfaces,
+  * the same Carpenter-Kennedy RK5(4) low-storage integrator,
+  * Lundgren-style linear forcing of the velocity fluctuations with a
+    proportional energy controller, so the "turbulence" is statistically
+    stationary over an episode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gll
+from .solver import _RK_A, _RK_B
+
+
+@dataclasses.dataclass(frozen=True)
+class BurgersConfig:
+    """Static configuration of one forced Burgers LES environment."""
+
+    n_poly: int = 7
+    n_elem: int = 12
+    length: float = 2.0 * np.pi
+    # flow
+    nu: float = 5e-3
+    u_rms: float = 1.0
+    # forcing (linear forcing + energy proportional controller)
+    forcing_a0: float = 0.3
+    # time stepping
+    cfl: float = 0.35
+    dt_rl: float = 0.1
+    t_end: float = 5.0
+    # reward (same form as paper Table 1)
+    k_max: int = 12
+    alpha: float = 0.4
+    c_max: float = 0.5        # per-element eddy-viscosity coefficient bound
+    # synthetic reference spectrum: E(k) ~ k^-2 exp(-2 (k/k_eta)^2)
+    k_eta: float = 24.0
+
+    @property
+    def n(self) -> int:
+        return self.n_poly + 1
+
+    @property
+    def dx(self) -> float:
+        return self.length / self.n_elem
+
+    @property
+    def jac(self) -> float:
+        return 2.0 / self.dx
+
+    @property
+    def n_dof(self) -> int:
+        return self.n_elem * self.n
+
+    @property
+    def k_energy(self) -> float:
+        """Target energy 1/2 u_rms^2 (1-D: one velocity component)."""
+        return 0.5 * self.u_rms**2
+
+    @property
+    def delta_filter(self) -> float:
+        return self.dx / self.n
+
+    @property
+    def dt(self) -> float:
+        """Fixed stable timestep (DG CFL ~ 1/(2N+1)) that divides dt_rl."""
+        v_max = 4.0 * self.u_rms  # Burgers wave speed ~ max|u|
+        dt_stable = self.cfl * self.dx / (v_max * (2 * self.n_poly + 1))
+        n_sub = int(np.ceil(self.dt_rl / dt_stable))
+        return self.dt_rl / n_sub
+
+    @property
+    def n_substeps(self) -> int:
+        return int(round(self.dt_rl / self.dt))
+
+    @property
+    def n_actions(self) -> int:
+        return int(round(self.t_end / self.dt_rl))
+
+    def operators(self) -> dict:
+        _, w = gll.gll_nodes_weights(self.n_poly)
+        return {
+            "D": jnp.asarray(gll.lagrange_derivative_matrix(self.n_poly),
+                             jnp.float32),
+            "inv_w_end": (float(1.0 / w[0]), float(1.0 / w[-1])),
+            "w": jnp.asarray(w, jnp.float32),
+        }
+
+
+# --- spectra ---------------------------------------------------------------
+def nodal_to_uniform(u: jax.Array, cfg: BurgersConfig) -> jax.Array:
+    """Interpolate nodal field (..., K, n, 1) to the cell-centered uniform
+    grid (..., K*n) — the FFT-ready 1-D grid."""
+    x_gll, _ = gll.gll_nodes_weights(cfg.n_poly)
+    v = jnp.asarray(
+        gll.lagrange_interpolation_matrix(x_gll, gll.equispaced_nodes(cfg.n)),
+        u.dtype,
+    )
+    q = jnp.einsum("ij,...kjc->...kic", v, u)[..., 0]   # (..., K, n)
+    return q.reshape(q.shape[:-2] + (cfg.n_dof,))
+
+
+def energy_spectrum(u_uniform: jax.Array) -> jax.Array:
+    """Shell spectrum E(k) of (..., N) velocity, sum_k E(k) = 1/2 <u^2>."""
+    n = u_uniform.shape[-1]
+    uhat = jnp.fft.rfft(u_uniform, axis=-1) / n
+    weight = np.full(n // 2 + 1, 2.0)
+    weight[0] = 1.0
+    if n % 2 == 0:
+        weight[-1] = 1.0
+    return 0.5 * jnp.abs(uhat) ** 2 * jnp.asarray(weight, u_uniform.dtype)
+
+
+def reference_spectrum(cfg: BurgersConfig) -> np.ndarray:
+    """Synthetic target E(k) ~ k^-2 exp(-2(k/k_eta)^2), normalized so the
+    discrete shells integrate to 1/2 u_rms^2 — the Burgers-turbulence analog
+    of the von Karman-Pao DNS stand-in."""
+    k = np.arange(cfg.n_dof // 2 + 1, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        spec = np.where(k > 0, k**-2.0, 0.0) * np.exp(-2.0 * (k / cfg.k_eta) ** 2)
+    spec = spec * (cfg.k_energy / max(np.sum(spec), 1e-300))
+    return spec
+
+
+def les_spectrum(u: jax.Array, cfg: BurgersConfig) -> jax.Array:
+    return energy_spectrum(nodal_to_uniform(u, cfg))
+
+
+# --- initial states --------------------------------------------------------
+@functools.lru_cache(maxsize=16)
+def _fourier_to_gll_matrix(cfg: BurgersConfig) -> np.ndarray:
+    """Complex (K*n, n_dof) matrix evaluating the uniform-grid Fourier series
+    at the global GLL coordinates."""
+    x_gll, _ = gll.gll_nodes_weights(cfg.n_poly)
+    offsets = (np.arange(cfg.n_elem) + 0.5) * cfg.dx
+    coords = (offsets[:, None] + 0.5 * cfg.dx * x_gll[None, :]).reshape(-1)
+    return gll.fourier_eval_matrix(cfg.n_dof, coords, cfg.length)
+
+
+def sample_initial_state(key: jax.Array, cfg: BurgersConfig) -> jax.Array:
+    """One random state (K, n, 1): random-phase field with the exact target
+    spectrum on the uniform grid, evaluated at the GLL nodes (1-D Rogallo)."""
+    n_grid = cfg.n_dof
+    e_target = jnp.asarray(reference_spectrum(cfg), jnp.float32)
+    n_half = n_grid // 2 + 1
+    theta = jax.random.uniform(key, (n_half,), jnp.float32, 0.0, 2.0 * np.pi)
+    # E(k) = |uhat_k/n|^2 for interior shells (weight 2) -> amplitude sqrt(E)
+    amp = jnp.sqrt(e_target)
+    amp = amp.at[0].set(0.0)
+    if n_grid % 2 == 0:
+        amp = amp.at[-1].set(0.0)  # drop the sign-ambiguous Nyquist mode
+    vhat = amp * jnp.exp(1j * theta.astype(jnp.complex64))
+    # full FFT ordering with Hermitian symmetry; fourier_eval_matrix divides
+    # by n, so scale back up to FFT convention
+    full = jnp.zeros((n_grid,), jnp.complex64)
+    full = full.at[:n_half].set(vhat * n_grid)
+    full = full.at[n_grid - jnp.arange(1, n_half)].set(
+        jnp.conj(vhat[1:] * n_grid))
+    mat = jnp.asarray(_fourier_to_gll_matrix(cfg), jnp.complex64)
+    u_gll = jnp.real(mat @ full).astype(jnp.float32)
+    return u_gll.reshape(cfg.n_elem, cfg.n, 1)
+
+
+def make_state_bank(key: jax.Array, cfg: BurgersConfig, n_states: int) -> jax.Array:
+    keys = jax.random.split(key, n_states)
+    return jax.vmap(lambda k: sample_initial_state(k, cfg))(keys)
+
+
+# --- solver ----------------------------------------------------------------
+def _surface_lift(vol: jax.Array, jump_right: jax.Array, jump_left: jax.Array,
+                  inv_w_end: tuple[float, float]) -> jax.Array:
+    """Strong-form DGSEM surface correction along the (last) node axis."""
+    inv_w0, inv_wn = inv_w_end
+    vol = vol.at[..., -1].add(inv_wn * jump_right)
+    vol = vol.at[..., 0].add(-inv_w0 * jump_left)
+    return vol
+
+
+def dg_gradient(us: jax.Array, cfg: BurgersConfig, ops: dict) -> jax.Array:
+    """BR1 gradient du/dx of nodal scalar field us (..., K, n)."""
+    vol = jnp.einsum("ij,...j->...i", ops["D"], us)
+    lo, hi = us[..., 0], us[..., -1]
+    u_right = jnp.roll(lo, shift=-1, axis=-1)       # neighbor across face e|e+1
+    u_star_right = 0.5 * (hi + u_right)
+    u_star_left = jnp.roll(u_star_right, shift=1, axis=-1)
+    du = _surface_lift(vol, u_star_right - hi, u_star_left - lo,
+                       ops["inv_w_end"])
+    return du * cfg.jac
+
+
+def burgers_rhs(us: jax.Array, c_nodes: jax.Array, cfg: BurgersConfig,
+                ops: dict) -> jax.Array:
+    """-d/dx(u^2/2 - nu_eff du/dx) + forcing on nodal field us (..., K, n)."""
+    d_matrix = ops["D"]
+    # --- advective: entropy-conservative split form + LLF surface ----------
+    a, b = us[..., :, None], us[..., None, :]
+    f_sharp = (a * a + a * b + b * b) / 6.0
+    vol_adv = 2.0 * jnp.einsum("ij,...ij->...i", d_matrix, f_sharp)
+    lo, hi = us[..., 0], us[..., -1]
+    u_right = jnp.roll(lo, shift=-1, axis=-1)
+    lam = jnp.maximum(jnp.abs(hi), jnp.abs(u_right))
+    f_star_adv = 0.25 * (hi**2 + u_right**2) - 0.5 * lam * (u_right - hi)
+    # --- viscous: BR1 gradient, eddy viscosity, central surface ------------
+    du = dg_gradient(us, cfg, ops)
+    nu_t = (c_nodes * cfg.delta_filter) ** 2 * jnp.abs(du)
+    f_visc = (cfg.nu + nu_t) * du
+    vol_visc = jnp.einsum("ij,...j->...i", d_matrix, f_visc)
+    fv_lo, fv_hi = f_visc[..., 0], f_visc[..., -1]
+    f_star_visc = 0.5 * (fv_hi + jnp.roll(fv_lo, shift=-1, axis=-1))
+    # --- combined strong-form divergence -----------------------------------
+    vol = vol_adv - vol_visc
+    f_nodes_lo = 0.5 * lo**2 - fv_lo
+    f_nodes_hi = 0.5 * hi**2 - fv_hi
+    f_star = f_star_adv - f_star_visc
+    f_star_left = jnp.roll(f_star, shift=1, axis=-1)
+    div = _surface_lift(vol, f_star - f_nodes_hi, f_star_left - f_nodes_lo,
+                        ops["inv_w_end"]) * cfg.jac
+    rhs = -div
+    # --- linear forcing on fluctuations with energy controller -------------
+    w = ops["w"] * 0.5  # reference [-1, 1] -> unit mass
+    u_mean = jnp.einsum("...kj,j->...", us, w) / cfg.n_elem
+    fluct = us - u_mean[..., None, None]
+    k_now = 0.5 * jnp.einsum("...kj,j->...", us**2, w) / cfg.n_elem
+    a_eff = cfg.forcing_a0 * jnp.clip(
+        cfg.k_energy / jnp.maximum(k_now, 0.1 * cfg.k_energy), 0.0, 3.0)
+    return rhs + a_eff[..., None, None] * fluct
+
+
+def rk_substep(us: jax.Array, c_nodes: jax.Array, cfg: BurgersConfig,
+               ops: dict) -> jax.Array:
+    """One Carpenter-Kennedy RK5(4) low-storage step of size cfg.dt."""
+    dt = jnp.asarray(cfg.dt, us.dtype)
+    du = jnp.zeros_like(us)
+    for stage in range(5):
+        rhs = burgers_rhs(us, c_nodes, cfg, ops)
+        du = _RK_A[stage] * du + dt * rhs
+        us = us + _RK_B[stage] * du
+    return us
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def advance_rl_interval(u: jax.Array, c_elem: jax.Array,
+                        cfg: BurgersConfig) -> jax.Array:
+    """Advance the Burgers LES by Delta t_RL under fixed per-element C
+    (one MDP transition).  u: (..., K, n, 1), c_elem: (..., K)."""
+    ops = cfg.operators()
+    c_nodes = jnp.broadcast_to(c_elem[..., None], c_elem.shape + (cfg.n,))
+
+    def body(us, _):
+        return rk_substep(us, c_nodes, cfg, ops), None
+
+    us, _ = jax.lax.scan(body, u[..., 0], None, length=cfg.n_substeps)
+    return us[..., None]

@@ -8,6 +8,10 @@ Reward : paper Eqs. (4)-(5) against the reference spectrum.
 Pure-functional API (reset/step are jit/vmap/shard_map friendly); batching over
 environments is done OUTSIDE by the orchestrator — mirroring the paper where
 each FLEXI instance is an independent MPI job.
+
+These free functions are the HIT *kernel*; the generic training stack talks
+to them through the solver-agnostic adapter `repro.envs.hit_les.HITLESEnv`
+(`envs.make("hit_les_24dof")`), which pins these numerics bit-for-bit.
 """
 from __future__ import annotations
 

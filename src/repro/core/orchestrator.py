@@ -7,15 +7,20 @@ into array placement:
 
   (i)   the environment fleet is one batched array sharded over the
         (pod, data) mesh axes; "launching" is `device_put` once,
-  (ii)  the initial-state bank is device-resident (generated once, indexed
-        per episode — the RAM-disk trick taken to its endpoint),
+  (ii)  the initial-state bank is device-resident (generated once by the
+        env's `initial_state_bank` hook, indexed per episode — the RAM-disk
+        trick taken to its endpoint),
   (iii) state/action exchange is a mesh-local einsum inside one jitted
         program; there is no database round-trip to optimize.
 
-The orchestrator also owns the fleet bookkeeping that matters for fault
-tolerance: environments are *recomputable by construction* — episode i of
-iteration k is fully determined by (seed, k, bank index), so replacing a
-failed shard means re-running a slice of the same pure function rather than
+The orchestrator is generic over the Env protocol (envs/base.py): it owns
+ONLY fleet layout/sharding and the state bank; physics, specs, and rewards
+live in the env, and the policy heads are built from the env's specs.
+
+The fleet bookkeeping that matters for fault tolerance is unchanged:
+environments are *recomputable by construction* — episode i of iteration k
+is fully determined by (seed, k, bank index), so replacing a failed shard
+means re-running a slice of the same pure function rather than
 re-scheduling an MPI job (see core/runner.py for the restart path).
 """
 from __future__ import annotations
@@ -27,8 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..cfd import initial, spectra
-from ..cfd.solver import HITConfig
+from ..envs.base import Env, as_env
 from . import policy as policy_lib
 from . import ppo as ppo_lib
 from . import rollout as rollout_lib
@@ -47,33 +51,39 @@ class Orchestrator:
 
     def __init__(
         self,
-        env_cfg: HITConfig,
+        env: Env,
         fleet: FleetConfig,
         *,
         mesh: Mesh | None = None,
         seed: int = 0,
     ):
-        self.env_cfg = env_cfg
+        self.env = as_env(env)  # legacy HITConfig call sites coerce here
         self.fleet = fleet
         self.mesh = mesh
-        self.pcfg = policy_lib.PolicyConfig(
-            n_nodes=env_cfg.n_poly + 1, cs_max=env_cfg.cs_max
+        self.pcfg = policy_lib.PolicyConfig.from_specs(
+            self.env.obs_spec, self.env.action_spec
         )
         key = jax.random.PRNGKey(seed)
         self.bank_key, self.run_key = jax.random.split(key)
         # Device-resident initial-state bank; index -1 is the unseen test state.
-        bank = initial.make_state_bank(self.bank_key, env_cfg, fleet.bank_size)
-        self.e_dns = jnp.asarray(spectra.reference_spectrum(env_cfg), jnp.float32)
+        bank = self.env.initial_state_bank(self.bank_key, fleet.bank_size)
         if mesh is not None:
             # Bank is replicated over env shards (every shard may draw any
-            # initial state); element axes optionally shard over `model`.
-            espec = (fleet.elem_axis,) if fleet.elem_axis else (None,)
-            bank_spec = P(None, *espec, None, None, None, None, None, None)
-            bank = jax.device_put(bank, NamedSharding(mesh, bank_spec))
-            self.env_spec = P(fleet.env_axes, *espec, None, None, None, None, None, None)
+            # initial state); the env's leading element axis optionally
+            # shards over `model`.  Specs are built from the bank's rank so
+            # any state layout (3-D HIT, 1-D Burgers, ...) places correctly.
+            espec = fleet.elem_axis if fleet.elem_axis else None
+            rest = (None,) * (bank.ndim - 2)
+            bank = jax.device_put(bank, NamedSharding(mesh, P(None, espec, *rest)))
+            self.env_spec = P(fleet.env_axes, espec, *rest)
         else:
             self.env_spec = None
         self.bank = bank
+
+    @property
+    def env_cfg(self):
+        """The env's static config (back-compat accessor)."""
+        return self.env.cfg
 
     # --- episode setup ------------------------------------------------------
     def draw_initial_states(self, key: jax.Array, n_envs: int | None = None
@@ -98,16 +108,14 @@ class Orchestrator:
         lines 4-13, all environments at once)."""
         k_init, k_roll = jax.random.split(key)
         u0 = self.draw_initial_states(k_init)
-        return rollout_lib.rollout(
-            params, self.pcfg, self.env_cfg, self.e_dns, u0, k_roll
-        )
+        return rollout_lib.rollout(params, self.pcfg, self.env, u0, k_roll)
 
     @partial(jax.jit, static_argnums=(0,))
     def evaluate(self, params: dict) -> jax.Array:
         """Deterministic (mean-action) episode on the held-out state ->
         normalized return, as the paper's test-state curve in Fig. 5."""
         traj = rollout_lib.rollout(
-            params, self.pcfg, self.env_cfg, self.e_dns, self.test_state(),
+            params, self.pcfg, self.env, self.test_state(),
             jax.random.PRNGKey(0), deterministic=True,
         )
         return rollout_lib.normalized_return(traj)[0]

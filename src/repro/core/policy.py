@@ -1,11 +1,15 @@
-"""The paper's policy network (Table 2): a per-element Conv3D stack.
+"""The paper's policy network (Table 2), generalized over env specs.
 
-Input : per-element nodal velocities (..., E, n, n, n, 3) with E = K^3.
-Output: Gaussian policy over the per-element Smagorinsky coefficient,
-        mean = cs_max * sigmoid(conv(x)) in [0, cs_max], state-independent
+Input : per-element nodal observations (..., E, *spatial, C) — E = K^3 and
+        3-D spatial for the HIT scenario, E = K and 1-D for Burgers.
+Output: Gaussian policy over the per-element bounded scalar action,
+        mean = low + (high-low) * sigmoid(conv(x)), state-independent
         learnable log-std (TF-Agents' default for continuous PPO).
 
-For N=5 (n=6) the stack reproduces Table 2 exactly (3,293 parameters):
+The heads are built from the environment's declarative `ObsSpec` /
+`ActionSpec` (`PolicyConfig.from_specs`) — nothing here knows which solver
+produced the observations.  For the paper's N=5 HIT case (n=6, 3-D) the
+stack reproduces Table 2 exactly (3,293 parameters):
 
     Conv3D k3 f8 zero-pad -> 6^3 x 8   ReLU
     Conv3D k3 f8 no-pad   -> 4^3 x 8   ReLU
@@ -15,7 +19,8 @@ For N=5 (n=6) the stack reproduces Table 2 exactly (3,293 parameters):
 
 For other n the same pattern generalizes: one zero-padded k3 layer, k3
 valid layers (filters 8, then 4) until the spatial size reaches 2, and a
-final k2 valid layer to 1.
+final k2 valid layer to 1.  For 1-D envs the identical plan runs with
+Conv1D kernels.
 
 The critic is an identical (separately parameterized) trunk producing a
 per-element scalar, averaged over elements — the state value.
@@ -35,9 +40,22 @@ from .. import nn
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
     n_nodes: int = 6          # GLL nodes per direction = N+1
-    channels: int = 3         # velocity components
-    cs_max: float = 0.5
+    channels: int = 3         # observation channels
+    cs_max: float = 0.5       # action upper bound (Table-2 name kept)
     log_std_init: float = -1.6  # std ~ 0.2 in sigmoid-space
+    n_dims: int = 3           # spatial rank of per-element obs (3-D HIT, 1-D Burgers)
+    act_low: float = 0.0      # action lower bound
+
+    @classmethod
+    def from_specs(cls, obs_spec, action_spec, *,
+                   log_std_init: float = -1.6) -> "PolicyConfig":
+        """Build the head configuration from an env's declarative specs."""
+        spatial = tuple(obs_spec.spatial)
+        if len(set(spatial)) != 1:
+            raise ValueError(f"anisotropic per-element grids unsupported: {spatial}")
+        return cls(n_nodes=spatial[0], channels=obs_spec.channels,
+                   cs_max=action_spec.high, act_low=action_spec.low,
+                   n_dims=len(spatial), log_std_init=log_std_init)
 
 
 def _conv_plan(n: int) -> list[tuple[int, int, str]]:
@@ -65,20 +83,21 @@ def _trunk_init(key: jax.Array, cfg: PolicyConfig) -> list[dict]:
     params = []
     c_in = cfg.channels
     for k_layer, (ksize, f, _pad) in zip(keys, plan):
-        params.append(nn.conv3d_init(k_layer, ksize, c_in, f))
+        params.append(nn.convnd_init(k_layer, ksize, c_in, f, ndim=cfg.n_dims))
         c_in = f
     return params
 
 
 def _trunk_apply(params: list[dict], cfg: PolicyConfig, obs: jax.Array) -> jax.Array:
-    """obs (..., E, n, n, n, C) -> per-element scalar (..., E)."""
+    """obs (..., E, *spatial, C) -> per-element scalar (..., E)."""
     plan = _conv_plan(cfg.n_nodes)
     x = obs
     for i, (p, (_k, _f, pad)) in enumerate(zip(params, plan)):
-        x = nn.conv3d(p, x, padding=pad)
+        x = nn.convnd(p, x, ndim=cfg.n_dims, padding=pad)
         if i < len(params) - 1:
             x = jax.nn.relu(x)
-    return x[..., 0, 0, 0, 0]  # spatial reduced to 1, single filter
+    # spatial reduced to (1,)*n_dims, single filter -> drop those axes
+    return x.reshape(x.shape[: -(cfg.n_dims + 1)])
 
 
 def init(key: jax.Array, cfg: PolicyConfig) -> dict:
@@ -91,9 +110,9 @@ def init(key: jax.Array, cfg: PolicyConfig) -> dict:
 
 
 def actor_mean(params: dict, cfg: PolicyConfig, obs: jax.Array) -> jax.Array:
-    """Mean action per element, in [0, cs_max]."""
+    """Mean action per element, in [act_low, cs_max]."""
     logits = _trunk_apply(params["actor"], cfg, obs)
-    return cfg.cs_max * jax.nn.sigmoid(logits)
+    return cfg.act_low + (cfg.cs_max - cfg.act_low) * jax.nn.sigmoid(logits)
 
 
 def value(params: dict, cfg: PolicyConfig, obs: jax.Array) -> jax.Array:

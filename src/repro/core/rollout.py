@@ -9,14 +9,17 @@ episode replaces launch + polling — synchronization becomes the data
 dependency between scan iterations.  "Launch overhead" is a single XLA
 dispatch (benchmarks/launch_overhead.py quantifies this against the paper's
 Sec. 3.3 numbers).
+
+The scan is generic over any registered `Env` (envs/base.py): the env is a
+static value closed over by jit, and `observe`/`step` are pure, so the same
+function lowers the HIT-LES fleet and the 1-D Burgers fleet alike.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..cfd import env as env_lib
-from ..cfd.solver import HITConfig
+from ..envs.base import Env, EnvState
 from . import policy as policy_lib
 from .ppo import Trajectory
 
@@ -24,27 +27,24 @@ from .ppo import Trajectory
 def rollout(
     params: dict,
     pcfg: policy_lib.PolicyConfig,
-    env_cfg: HITConfig,
-    e_dns: jax.Array,
+    env: Env,
     u0: jax.Array,
     key: jax.Array,
     *,
     deterministic: bool = False,
 ) -> Trajectory:
-    """Roll a batch of environments for one full episode (T = n_actions).
+    """Roll a batch of environments for one full episode (T = env.n_actions).
 
-    u0: (B, K,K,K, n,n,n, 5) initial conservative states.
+    u0: (B, *state_shape) initial solver states (bank rows).
     Returns a time-major Trajectory (T, B, ...).
     """
-    n_steps = env_cfg.n_actions
+    n_steps = env.n_actions
     batch = u0.shape[0]
-    state0 = env_lib.EnvState(
-        u=u0, t_step=jnp.zeros((batch,), jnp.int32)
-    )
+    state0 = EnvState(u=u0, t_step=jnp.zeros((batch,), jnp.int32))
     step_keys = jax.random.split(key, n_steps)
 
-    def step_fn(state: env_lib.EnvState, key_t: jax.Array):
-        obs = env_lib.observe(state.u, env_cfg)
+    def step_fn(state: EnvState, key_t: jax.Array):
+        obs = env.observe(state)
         if deterministic:
             action = policy_lib.actor_mean(params, pcfg, obs)
             mean, std = policy_lib.distribution(params, pcfg, obs)
@@ -52,14 +52,14 @@ def rollout(
         else:
             action, logp = policy_lib.sample_action(key_t, params, pcfg, obs)
         val = policy_lib.value(params, pcfg, obs)
-        res = env_lib.step(state, action, env_cfg, e_dns)
+        res = env.step(state, action)
         out = (obs, action, logp, res.reward, res.done, val)
         return res.state, out
 
     final_state, (obs, actions, log_probs, rewards, dones, values) = jax.lax.scan(
         step_fn, state0, step_keys
     )
-    last_obs = env_lib.observe(final_state.u, env_cfg)
+    last_obs = env.observe(final_state)
     last_value = policy_lib.value(params, pcfg, last_obs)
     return Trajectory(
         obs=obs,
@@ -80,3 +80,19 @@ def episode_return(traj: Trajectory) -> jax.Array:
 def normalized_return(traj: Trajectory) -> jax.Array:
     """Return normalized by the maximum achievable (+1 per step), as Fig. 5."""
     return episode_return(traj) / traj.rewards.shape[0]
+
+
+def constant_action_return(env: Env, u0: jax.Array, value: float) -> float:
+    """Normalized episode return of a constant-action policy on initial
+    states u0 (B, *state_shape) — the paper's static baselines (Fig. 5
+    bottom: Smagorinsky C_s=0.17, implicit LES C_s=0), for any Env."""
+    state = EnvState(u=u0, t_step=jnp.zeros((u0.shape[0],), jnp.int32))
+    action = jnp.full((u0.shape[0],) + env.action_spec.shape, value,
+                      jnp.float32)
+    step = jax.jit(env.step)
+    total = 0.0
+    for _ in range(env.n_actions):
+        res = step(state, action)
+        state = res.state
+        total += float(jnp.mean(res.reward))
+    return total / env.n_actions

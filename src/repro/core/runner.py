@@ -33,9 +33,9 @@ import jax
 import jax.numpy as jnp
 
 from .. import optim
+from ..envs.base import Env
 from . import checkpoints, policy as policy_lib, ppo as ppo_lib
 from .orchestrator import FleetConfig, Orchestrator
-from ..cfd.solver import HITConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +53,7 @@ class RunnerConfig:
 class Runner:
     def __init__(
         self,
-        env_cfg: HITConfig,
+        env: Env,
         fleet: FleetConfig,
         ppo_cfg: ppo_lib.PPOConfig | None = None,
         run_cfg: RunnerConfig | None = None,
@@ -63,7 +63,7 @@ class Runner:
     ):
         self.run_cfg = run_cfg or RunnerConfig()
         self.ppo_cfg = ppo_cfg or ppo_lib.PPOConfig()
-        self.orch = Orchestrator(env_cfg, fleet, mesh=mesh, seed=self.run_cfg.seed)
+        self.orch = Orchestrator(env, fleet, mesh=mesh, seed=self.run_cfg.seed)
         self.failure_injector = failure_injector
         self._ckpt_thread: threading.Thread | None = None
 
@@ -147,7 +147,9 @@ class Runner:
             "iteration": k,
             "t_sample_s": t_sample,
             "t_update_s": t_update,
-            "return_norm": float(stats["mean_return"]) / self.orch.env_cfg.n_actions,
+            # episode length read off the trajectory, not the env config —
+            # envs with different horizons keep the metric correct
+            "return_norm": float(stats["mean_return"]) / traj.rewards.shape[0],
             **{f"ppo/{n}": float(v) for n, v in stats.items()},
         }
         return record

@@ -1,0 +1,35 @@
+"""Solver-agnostic RL environments: the Env protocol and scenario registry.
+
+    from repro import envs
+
+    env = envs.make("hit_les_reduced")      # or "burgers_reduced", ...
+    print(envs.registered())
+
+Every scenario implements the same pure `reset/step/observe` contract with
+declarative obs/action specs (envs/base.py), so the whole training stack —
+policy heads, rollout scan, fleet orchestration, PPO — is generic over the
+physics (the paper's "easy integration of various HPC solvers" modularity
+claim, jit-native).
+"""
+from .base import ActionSpec, Env, EnvState, ObsSpec, StepResult, as_env, init_state
+from .registry import make, register, registered
+
+# Importing the scenario modules populates the registry.
+from . import burgers, hit_les  # noqa: F401  (registration side effects)
+from .burgers import BurgersEnv
+from .hit_les import HITLESEnv
+
+__all__ = [
+    "ActionSpec",
+    "BurgersEnv",
+    "Env",
+    "EnvState",
+    "HITLESEnv",
+    "ObsSpec",
+    "StepResult",
+    "as_env",
+    "init_state",
+    "make",
+    "register",
+    "registered",
+]

@@ -1,0 +1,133 @@
+"""The solver-agnostic environment contract.
+
+The paper's framework ("Relexi is built with modularity in mind and allows
+easy integration of various HPC solvers") couples ANY MPI solver to the RL
+loop through a thin state/action/reward exchange.  This module is the
+jit-native formulation of that boundary: an environment is a *hashable,
+static* object whose methods are pure array programs, so the whole fleet —
+any scenario — compiles into one XLA program (jit / vmap / shard_map pass
+straight through).
+
+Layout conventions shared by every environment:
+
+  * `EnvState.u` is a single conservative/nodal state array whose leading
+    axes may carry an environment batch; `initial_state_bank` returns a
+    stack of such arrays with the bank axis first.
+  * Observations are element-local: shape (..., E, *spatial, C) with E the
+    number of DG elements, `spatial` the per-element node grid (1-D or 3-D)
+    and C the channel count — declared by `ObsSpec`.
+  * Actions are per-element scalars (..., E) bounded to
+    [`ActionSpec.low`, `ActionSpec.high`].
+
+`core/policy.py` builds its actor/critic heads from these specs alone;
+`core/rollout.py` scans `step` over any `Env`; `core/orchestrator.py` only
+adds fleet sharding + the initial-state bank.  Nothing in `core/` imports a
+concrete solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvState(NamedTuple):
+    """Carried MDP state: solver field + RL step counter."""
+
+    u: jax.Array          # solver state; leading axes may be a batch
+    t_step: jax.Array     # RL step counter (int32, scalar or (B,))
+
+
+class StepResult(NamedTuple):
+    state: EnvState
+    obs: jax.Array
+    reward: jax.Array
+    done: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Declarative per-environment observation layout (..., E, *spatial, C)."""
+
+    n_elements: int                 # E: number of DG elements
+    spatial: tuple[int, ...]        # per-element node grid, e.g. (n, n, n) or (n,)
+    channels: int                   # C
+    # Physical divisor the env ALREADY applied inside observe() (e.g. u_rms),
+    # declared so consumers can un-normalize for diagnostics.  The training
+    # stack never re-applies it — observations arrive O(1) by contract.
+    scale: float = 1.0
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (self.n_elements, *self.spatial, self.channels)
+
+    @property
+    def ndim_spatial(self) -> int:
+        return len(self.spatial)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActionSpec:
+    """Per-element bounded scalar action (..., E) in [low, high]."""
+
+    n_elements: int
+    low: float = 0.0
+    high: float = 1.0
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (self.n_elements,)
+
+
+@runtime_checkable
+class Env(Protocol):
+    """The contract every registered scenario implements.
+
+    Implementations must be hashable (frozen dataclasses over scalar
+    configs) — they are closed over by jit as static values — and every
+    method must be a pure function of its array arguments.
+    """
+
+    @property
+    def obs_spec(self) -> ObsSpec: ...
+
+    @property
+    def action_spec(self) -> ActionSpec: ...
+
+    @property
+    def n_actions(self) -> int:
+        """Episode horizon T (fixed-length episodes, as in the paper)."""
+        ...
+
+    def initial_state_bank(self, key: jax.Array, n: int) -> jax.Array:
+        """(n, *state_shape) device-resident bank of initial solver states."""
+        ...
+
+    def reset_from_bank(self, bank: jax.Array, index: jax.Array
+                        ) -> tuple[EnvState, jax.Array]: ...
+
+    def observe(self, state: EnvState) -> jax.Array: ...
+
+    def step(self, state: EnvState, action: jax.Array) -> StepResult:
+        """One MDP transition; deterministic given (state, action)."""
+        ...
+
+
+def init_state(u0: jax.Array, batch_shape: tuple[int, ...] = ()) -> EnvState:
+    """Wrap bank rows (or a single state) into a fresh EnvState at t=0."""
+    return EnvState(u=u0, t_step=jnp.zeros(batch_shape, jnp.int32))
+
+
+def as_env(env_or_cfg) -> Env:
+    """Coerce legacy `HITConfig` values to the Env protocol.
+
+    Pre-refactor call sites passed a raw `HITConfig` into the orchestrator /
+    runner; keep them working by wrapping it in the HIT-LES adapter.
+    """
+    from ..cfd.solver import HITConfig
+    if isinstance(env_or_cfg, HITConfig):
+        from .hit_les import HITLESEnv
+        return HITLESEnv(cfg=env_or_cfg)
+    return env_or_cfg

@@ -1,0 +1,44 @@
+"""String-keyed environment registry: `envs.make("hit_les_24dof")`.
+
+The paper selects its scenario via a config name in the Relexi SLURM job;
+here the registry is the same indirection for the jit-native envs.  A
+factory may accept keyword overrides, which are forwarded verbatim — e.g.
+`envs.make("hit_les_reduced", t_end=1.0)` rebuilds the underlying config
+with that field replaced.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from .base import Env
+
+_REGISTRY: dict[str, Callable[..., Env]] = {}
+
+
+def register(name: str) -> Callable[[Callable[..., Env]], Callable[..., Env]]:
+    """Decorator registering an env factory under `name`."""
+
+    def deco(factory: Callable[..., Env]) -> Callable[..., Env]:
+        if name in _REGISTRY:
+            raise ValueError(f"environment {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def make(name: str, **overrides) -> Env:
+    """Instantiate a registered environment, optionally overriding config
+    fields (forwarded to the factory as keyword arguments)."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY)) or "<none>"
+        raise KeyError(f"unknown environment {name!r}; registered: {known}"
+                       ) from None
+    return factory(**overrides)
+
+
+def registered() -> tuple[str, ...]:
+    """Sorted names of all registered environments."""
+    return tuple(sorted(_REGISTRY))

@@ -1,14 +1,16 @@
-"""The paper's training loop: PPO on the HIT LES environment (Relexi).
+"""The paper's training loop: PPO on any registered environment (Relexi).
 
 This is the production entry point for the RL-CFD cells — the TPU-native
-equivalent of the paper's `relexi --config ...` SLURM job.  The fleet of
-FLEXI-equivalent DGSEM environments shards over the mesh's (pod, data)
-axes; the Table-2 Conv3D policy trains with clip-PPO using the paper's
-hyperparameters (Sec. 5.3).
+equivalent of the paper's `relexi --config ...` SLURM job.  The scenario is
+selected by registry name (`repro.envs`); the fleet shards over the mesh's
+(pod, data) axes and the spec-built policy trains with clip-PPO using the
+paper's hyperparameters (Sec. 5.3).
 
-    # paper 24-DOF configuration, 16 parallel environments:
-    PYTHONPATH=src python -m repro.launch.rl_train --dof 24 --n-envs 16 \
-        --iterations 4000
+    # paper 24-DOF HIT configuration, 16 parallel environments:
+    PYTHONPATH=src python -m repro.launch.rl_train --env hit_les_24dof \
+        --n-envs 16 --iterations 4000
+    # the 1-D Burgers control scenario, same loop:
+    PYTHONPATH=src python -m repro.launch.rl_train --env burgers_96dof
     # CPU-scale smoke:
     PYTHONPATH=src python -m repro.launch.rl_train --reduced --n-envs 2 \
         --iterations 3
@@ -19,7 +21,7 @@ import argparse
 
 import jax
 
-from ..configs import relexi_hit
+from .. import envs
 from ..core.orchestrator import FleetConfig
 from ..core.ppo import PPOConfig
 from ..core.runner import Runner, RunnerConfig
@@ -28,9 +30,12 @@ from . import mesh as mesh_lib
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dof", type=int, choices=(24, 32), default=24)
+    ap.add_argument("--env", default=None, choices=envs.registered(),
+                    help="registered environment name")
+    ap.add_argument("--dof", type=int, choices=(24, 32), default=24,
+                    help="HIT Table-1 scale (when --env is not given)")
     ap.add_argument("--reduced", action="store_true",
-                    help="CPU-scale HIT config")
+                    help="CPU-scale HIT config (when --env is not given)")
     ap.add_argument("--n-envs", type=int, default=16,
                     help="parallel environments (paper: 16/32/64)")
     ap.add_argument("--iterations", type=int, default=100)
@@ -41,16 +46,19 @@ def main() -> None:
     ap.add_argument("--no-mesh", action="store_true")
     args = ap.parse_args()
 
-    if args.reduced:
-        env_cfg = relexi_hit.reduced()
+    if args.env:
+        name = args.env
+    elif args.reduced:
+        name = "hit_les_reduced"
     else:
-        env_cfg = relexi_hit.HIT24 if args.dof == 24 else relexi_hit.HIT32
+        name = f"hit_les_{args.dof}dof"
+    env = envs.make(name)
 
     mesh = None if args.no_mesh else mesh_lib.make_host_mesh()
     fleet = FleetConfig(n_envs=args.n_envs,
                         bank_size=max(args.n_envs + 1, 9))
     runner = Runner(
-        env_cfg, fleet,
+        env, fleet,
         ppo_cfg=PPOConfig(),  # paper Sec. 5.3 defaults
         run_cfg=RunnerConfig(
             n_iterations=args.iterations,
@@ -61,6 +69,7 @@ def main() -> None:
         ),
         mesh=mesh,
     )
+    print(f"training {name}: {args.iterations} iterations x {args.n_envs} envs")
     history = runner.train()
     last = history[-1] if history else {}
     print(f"finished {len(history)} iterations; "

@@ -13,6 +13,8 @@ from .layers import (
     Initializer,
     conv3d,
     conv3d_init,
+    convnd,
+    convnd_init,
     dense,
     dense_init,
     embedding_init,
@@ -33,6 +35,8 @@ __all__ = [
     "dense_init",
     "conv3d",
     "conv3d_init",
+    "convnd",
+    "convnd_init",
     "embedding_init",
     "layernorm",
     "layernorm_init",

@@ -64,12 +64,20 @@ def dense(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
     return y
 
 
-# --- conv3d ------------------------------------------------------------------
-def conv3d_init(key, k: int, c_in: int, c_out: int, *, bias: bool = True) -> dict:
-    fan_in = k * k * k * c_in
+# --- convNd (channels-last, any spatial rank 1..3) ---------------------------
+_CONV_DIMNUMS = {
+    1: ("NWC", "WIO", "NWC"),
+    2: ("NHWC", "HWIO", "NHWC"),
+    3: ("NDHWC", "DHWIO", "NDHWC"),
+}
+
+
+def convnd_init(key, k: int, c_in: int, c_out: int, *, ndim: int = 3,
+                bias: bool = True) -> dict:
+    fan_in = k**ndim * c_in
     kw, _ = jax.random.split(key)
     # He-normal (ReLU net in the policy)
-    w = jax.random.normal(kw, (k, k, k, c_in, c_out), jnp.float32)
+    w = jax.random.normal(kw, (k,) * ndim + (c_in, c_out), jnp.float32)
     w = w * np.sqrt(2.0 / fan_in)
     p = {"w": w}
     if bias:
@@ -77,20 +85,31 @@ def conv3d_init(key, k: int, c_in: int, c_out: int, *, bias: bool = True) -> dic
     return p
 
 
-def conv3d(p: dict, x: jax.Array, *, padding: str = "VALID") -> jax.Array:
-    """x: (..., D, H, W, C).  Flattens leading axes to one batch axis."""
-    batch = x.shape[:-4]
-    x2 = x.reshape((-1,) + x.shape[-4:])
+def convnd(p: dict, x: jax.Array, *, ndim: int = 3,
+           padding: str = "VALID") -> jax.Array:
+    """x: (..., *spatial, C) with `ndim` spatial axes.  Flattens leading axes
+    to one batch axis."""
+    batch = x.shape[: -(ndim + 1)]
+    x2 = x.reshape((-1,) + x.shape[-(ndim + 1):])
     y = jax.lax.conv_general_dilated(
         x2,
         p["w"].astype(x.dtype),
-        window_strides=(1, 1, 1),
+        window_strides=(1,) * ndim,
         padding=padding,
-        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+        dimension_numbers=_CONV_DIMNUMS[ndim],
     )
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y.reshape(batch + y.shape[1:])
+
+
+def conv3d_init(key, k: int, c_in: int, c_out: int, *, bias: bool = True) -> dict:
+    return convnd_init(key, k, c_in, c_out, ndim=3, bias=bias)
+
+
+def conv3d(p: dict, x: jax.Array, *, padding: str = "VALID") -> jax.Array:
+    """x: (..., D, H, W, C).  Flattens leading axes to one batch axis."""
+    return convnd(p, x, ndim=3, padding=padding)
 
 
 # --- norms -------------------------------------------------------------------

@@ -1,0 +1,181 @@
+"""Env-protocol conformance suite + HIT numerical-identity regression.
+
+One parametrized contract run against registered environments: specs are
+truthful (shapes/dtypes/bounds), `step` is deterministic given
+(state, action), the blow-up guard floors the reward and keeps the carried
+state sane, and `reset_from_bank` round-trips.  Solver-scale envs
+(hit_les_24dof/32dof, burgers_96dof) run the cheap spec/bank checks only;
+the reduced envs additionally exercise stepping and full training.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs
+from repro.core import policy as policy_lib, rollout as rollout_lib
+
+ALL = envs.registered()
+REDUCED = tuple(n for n in ALL if n.endswith("_reduced"))
+
+
+def _short(name):
+    """Cheap-horizon override so bank/step checks stay fast at any scale."""
+    return envs.make(name, t_end=0.2, dt_rl=0.1)
+
+
+# --- declarative specs ------------------------------------------------------
+@pytest.mark.parametrize("name", ALL)
+def test_specs_declared_and_hashable(name):
+    env = _short(name)
+    assert env.obs_spec.shape == (env.obs_spec.n_elements,
+                                  *env.obs_spec.spatial,
+                                  env.obs_spec.channels)
+    assert env.action_spec.low < env.action_spec.high
+    assert env.obs_spec.scale > 0.0  # observe() divides by it; must be usable
+    assert env.n_actions >= 1
+    hash(env)  # envs are static jit values: must be hashable
+    assert isinstance(env, envs.Env)
+
+
+@pytest.mark.parametrize("name", REDUCED)
+def test_bank_reset_roundtrip_and_obs_spec(name):
+    env = envs.make(name)
+    bank = env.initial_state_bank(jax.random.PRNGKey(0), 3)
+    assert bank.shape[0] == 3
+    assert bool(jnp.all(jnp.isfinite(bank)))
+    state, obs = env.reset_from_bank(bank, jnp.asarray(1))
+    np.testing.assert_array_equal(np.asarray(state.u), np.asarray(bank[1]))
+    assert int(state.t_step) == 0
+    assert obs.shape == env.obs_spec.shape
+    assert obs.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(obs),
+                                  np.asarray(env.observe(state)))
+
+
+# --- stepping contract ------------------------------------------------------
+def _mid_action(env):
+    spec = env.action_spec
+    return jnp.full(spec.shape, 0.5 * (spec.low + spec.high), jnp.float32)
+
+
+@pytest.mark.parametrize("name", REDUCED)
+def test_step_shapes_dtypes_and_bounds(name):
+    env = envs.make(name)
+    bank = env.initial_state_bank(jax.random.PRNGKey(1), 2)
+    state, _ = env.reset_from_bank(bank, jnp.asarray(0))
+    res = jax.jit(env.step)(state, _mid_action(env))
+    assert res.obs.shape == env.obs_spec.shape
+    assert res.reward.shape == () and res.reward.dtype == jnp.float32
+    assert res.done.dtype == jnp.bool_
+    assert res.state.u.shape == state.u.shape
+    assert -1.0 <= float(res.reward) <= 1.0
+    assert bool(jnp.all(jnp.isfinite(res.state.u)))
+
+
+@pytest.mark.parametrize("name", REDUCED)
+def test_step_deterministic(name):
+    env = envs.make(name)
+    bank = env.initial_state_bank(jax.random.PRNGKey(2), 2)
+    state, _ = env.reset_from_bank(bank, jnp.asarray(1))
+    action = _mid_action(env)
+    r1 = env.step(state, action)
+    r2 = env.step(state, action)
+    np.testing.assert_array_equal(np.asarray(r1.state.u), np.asarray(r2.state.u))
+    np.testing.assert_array_equal(np.asarray(r1.reward), np.asarray(r2.reward))
+
+
+@pytest.mark.parametrize("name", REDUCED)
+def test_blowup_guard(name):
+    """A non-finite advance reverts the transition and floors the reward at
+    -1 — fleet-wide fault tolerance is part of the env contract."""
+    env = envs.make(name)
+    bank = env.initial_state_bank(jax.random.PRNGKey(3), 2)
+    state, _ = env.reset_from_bank(bank, jnp.asarray(0))
+    poisoned = state._replace(u=state.u.at[(0,) * state.u.ndim].set(jnp.nan))
+    res = jax.jit(env.step)(poisoned, _mid_action(env))
+    assert float(res.reward) == -1.0
+    np.testing.assert_array_equal(np.asarray(res.state.u),
+                                  np.asarray(poisoned.u))
+
+
+@pytest.mark.parametrize("name", REDUCED)
+def test_policy_heads_from_specs(name):
+    env = envs.make(name)
+    pcfg = policy_lib.PolicyConfig.from_specs(env.obs_spec, env.action_spec)
+    params = policy_lib.init(jax.random.PRNGKey(4), pcfg)
+    bank = env.initial_state_bank(jax.random.PRNGKey(5), 2)
+    obs = jnp.stack([env.reset_from_bank(bank, jnp.asarray(i))[1]
+                     for i in range(2)])
+    mean = policy_lib.actor_mean(params, pcfg, obs)
+    assert mean.shape == (2,) + env.action_spec.shape
+    assert bool(jnp.all(mean >= env.action_spec.low))
+    assert bool(jnp.all(mean <= env.action_spec.high))
+    val = policy_lib.value(params, pcfg, obs)
+    assert val.shape == (2,)
+
+
+# --- HIT numerical identity -------------------------------------------------
+def test_hit_adapter_rollout_matches_free_functions():
+    """The env-protocol rollout of the HIT scenario is bit-identical to a
+    direct composition of the pre-refactor cfd free functions."""
+    from repro.cfd import env as hit_kernel, spectra
+
+    env = envs.make("hit_les_reduced")
+    cfg = env.cfg
+    pcfg = policy_lib.PolicyConfig.from_specs(env.obs_spec, env.action_spec)
+    params = policy_lib.init(jax.random.PRNGKey(0), pcfg)
+    u0 = env.initial_state_bank(jax.random.PRNGKey(1), 2)
+    key = jax.random.PRNGKey(2)
+
+    traj = jax.jit(lambda p, u, k: rollout_lib.rollout(p, pcfg, env, u, k)
+                   )(params, u0, key)
+
+    # reference: the scan the pre-refactor rollout hard-wired to cfd.env
+    e_dns = jnp.asarray(spectra.reference_spectrum(cfg), jnp.float32)
+
+    def reference(params, u0, key):
+        state0 = hit_kernel.EnvState(
+            u=u0, t_step=jnp.zeros((u0.shape[0],), jnp.int32))
+
+        def step_fn(state, key_t):
+            obs = hit_kernel.observe(state.u, cfg)
+            action, logp = policy_lib.sample_action(key_t, params, pcfg, obs)
+            val = policy_lib.value(params, pcfg, obs)
+            res = hit_kernel.step(state, action, cfg, e_dns)
+            return res.state, (obs, action, logp, res.reward, val)
+
+        return jax.lax.scan(step_fn, state0,
+                            jax.random.split(key, cfg.n_actions))
+
+    _, (obs, actions, log_probs, rewards, values) = jax.jit(reference)(
+        params, u0, key)
+    for got, want in ((traj.obs, obs), (traj.actions, actions),
+                      (traj.log_probs, log_probs), (traj.rewards, rewards),
+                      (traj.values, values)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --- end-to-end: both scenarios through the SAME runner ----------------------
+@pytest.mark.parametrize("name", REDUCED)
+def test_train_through_unchanged_runner(name, tmp_path):
+    """Acceptance: every registered reduced scenario trains >= 3 iterations
+    through the identical Runner code path with finite losses."""
+    from repro.core.orchestrator import FleetConfig
+    from repro.core.runner import Runner, RunnerConfig
+
+    runner = Runner(
+        envs.make(name), FleetConfig(n_envs=2, bank_size=4),
+        run_cfg=RunnerConfig(n_iterations=3, eval_every=2, checkpoint_every=10,
+                             checkpoint_dir=str(tmp_path / name),
+                             async_checkpoint=False),
+    )
+    history = runner.train(resume=False)
+    assert len(history) == 3
+    for rec in history:
+        assert np.isfinite(rec["return_norm"])
+        assert np.isfinite(rec["ppo/loss"])
+        assert -1.0 <= rec["return_norm"] <= 1.0
+    assert any("eval_return_norm" in r for r in history)

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# Skip (not crash) the whole module when hypothesis isn't installed, so the
+# rest of the suite still collects and runs.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.cfd import spectra

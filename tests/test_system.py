@@ -3,10 +3,9 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import relexi_hit
+from repro import envs
 from repro.core.orchestrator import FleetConfig, Orchestrator
 from repro.core.ppo import PPOConfig
 from repro.core.runner import Runner, RunnerConfig
@@ -15,9 +14,8 @@ from repro.core.runner import Runner, RunnerConfig
 def test_full_rl_training_loop(tmp_path):
     """Three synchronous PPO iterations: finite metrics, eval runs,
     checkpoints are written, metrics.jsonl is append-only structured."""
-    env_cfg = relexi_hit.reduced()
     runner = Runner(
-        env_cfg, FleetConfig(n_envs=2, bank_size=4),
+        envs.make("hit_les_reduced"), FleetConfig(n_envs=2, bank_size=4),
         ppo_cfg=PPOConfig(),
         run_cfg=RunnerConfig(n_iterations=3, eval_every=2,
                              checkpoint_every=2,
@@ -39,21 +37,13 @@ def test_full_rl_training_loop(tmp_path):
 def test_reward_improves_with_good_actions():
     """Sanity: against the synthetic DNS target, a reasonable constant C_s
     beats an absurd one — the reward surface the agent climbs is real."""
-    from repro.cfd import env as env_lib
-    env_cfg = relexi_hit.reduced()
-    orch = Orchestrator(env_cfg, FleetConfig(n_envs=1, bank_size=3))
+    from repro.core.rollout import constant_action_return
+    env = envs.make("hit_les_reduced")
+    orch = Orchestrator(env, FleetConfig(n_envs=1, bank_size=3))
     u0 = orch.test_state()
 
     def episode_return(cs_val):
-        state = env_lib.EnvState(u=u0, t_step=jnp.zeros((1,), jnp.int32))
-        action = jnp.full((1, env_cfg.n_elem**3), cs_val, jnp.float32)
-        step = jax.jit(lambda s, a: env_lib.step(s, a, env_cfg, orch.e_dns))
-        tot = 0.0
-        for _ in range(env_cfg.n_actions):
-            res = step(state, action)
-            state = res.state
-            tot += float(res.reward[0])
-        return tot
+        return constant_action_return(env, u0, cs_val)
 
     # an over-dissipative model (C_s = 0.5 everywhere) must score worse
     # than a moderate one on the spectral reward
