@@ -31,6 +31,8 @@ def main() -> None:
         ("fig4", "strong scaling (paper Fig. 4)", scaling_strong.run),
         ("fig5", "training + baselines (paper Fig. 5 / Table 1)",
          training_curves.run),
+        ("channel", "channel WMLES training + wall-model baselines",
+         training_curves.run_channel),
         ("launch", "launch overhead (paper Sec. 3.3)", launch_overhead.run),
         ("roofline", "roofline table (dry-run artifacts)", roofline.run),
         ("perf", "perf hillclimb comparisons (EXPERIMENTS.md §Perf)",

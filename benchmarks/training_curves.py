@@ -28,6 +28,44 @@ def constant_cs_return(orch: Orchestrator, cs_value: float) -> float:
     return constant_action_return(orch.env, orch.test_state(), cs_value)
 
 
+def run_channel(quick: bool = True, iterations: int | None = None) -> dict:
+    """Training curve + static baselines for the wall-model channel scenario.
+
+    The static baselines are the channel analogs of the paper's Fig. 5
+    bottom: the equilibrium wall model applied as-is (a = 1) and no wall
+    stress at all (a = 0) — the trained per-element scaling should at least
+    match the equilibrium model on the profile-error reward.
+    """
+    env = envs.make("channel_wm_reduced" if quick else "channel_wm")
+    iters = iterations or (12 if quick else 60)
+    results = {}
+    common.row("# channel_training", "n_envs", "iteration", "return_norm")
+    runner = Runner(
+        env, FleetConfig(n_envs=2, bank_size=9),
+        ppo_cfg=PPOConfig(),
+        run_cfg=RunnerConfig(n_iterations=iters, eval_every=10**9,
+                             checkpoint_every=10**9,
+                             checkpoint_dir="/tmp/bench_channel",
+                             async_checkpoint=False),
+    )
+    history = runner.train(resume=False)
+    curve = [r["return_norm"] for r in history if "return_norm" in r]
+    for i, r in enumerate(curve):
+        if i % max(1, len(curve) // 6) == 0 or i == len(curve) - 1:
+            common.row("channel", 2, i, f"{r:.4f}")
+    results["curve_2_envs"] = curve
+    results["trained_eval"] = float(runner.orch.evaluate(runner.params))
+    equil = constant_cs_return(runner.orch, 1.0)
+    no_model = constant_cs_return(runner.orch, 0.0)
+    results["baseline_equilibrium_wm_a1"] = equil
+    results["baseline_no_wall_stress_a0"] = no_model
+    common.row("channel_baselines", "equilibrium_wm", f"{equil:.4f}")
+    common.row("channel_baselines", "no_wall_stress", f"{no_model:.4f}")
+    common.row("channel_baselines", "rl_trained", f"{results['trained_eval']:.4f}")
+    common.save_json("channel_training.json", results)
+    return results
+
+
 def run(quick: bool = True, iterations: int | None = None) -> dict:
     env = envs.make("hit_les_reduced")
     iters = iterations or (12 if quick else 60)
@@ -70,4 +108,13 @@ def run(quick: bool = True, iterations: int | None = None) -> dict:
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--env", default="hit", choices=("hit", "channel_wm"),
+                    help="which scenario's training curve to produce")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.env == "channel_wm":
+        run_channel(quick=not args.full)
+    else:
+        run(quick=not args.full)

@@ -1,22 +1,27 @@
 """Quickstart: the paper's RL-CFD loop through the env registry.
 
-Any registered scenario — the paper's 3-D HIT-LES or the 1-D Burgers
-control problem — trains through the same ~10 lines:
+Any registered scenario — the paper's 3-D HIT-LES, the 1-D Burgers control
+problem, or the wall-modeled channel flow — trains through the same ~10
+lines:
 
     from repro import envs
     from repro.core.orchestrator import FleetConfig
     from repro.core.runner import Runner, RunnerConfig
 
-    env = envs.make("hit_les_reduced")          # or "burgers_reduced", ...
+    env = envs.make("hit_les_reduced")   # or "burgers_reduced", "channel_wm"
     runner = Runner(env, FleetConfig(n_envs=4, bank_size=9))
     history = runner.train()
 
-This script does exactly that for both scenarios at CPU smoke scale, then
-peeks under the hood: the spec-built policy and one sharded fleet rollout.
+This script does exactly that for every scenario family at CPU smoke scale
+(or one scenario of your choice via --env), then peeks under the hood: the
+spec-built policy and one sharded fleet rollout.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --env channel_wm_reduced
     # (pytest needs no prefix: pyproject.toml sets pythonpath = ["src"])
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -25,10 +30,18 @@ from repro.core import policy, rollout
 from repro.core.orchestrator import FleetConfig
 from repro.core.runner import Runner, RunnerConfig
 
+SMOKE_SCENARIOS = ("hit_les_reduced", "burgers_reduced", "channel_wm_reduced")
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--env", default=None, choices=envs.registered(),
+                help="train one registered scenario instead of the "
+                     "reduced smoke set")
+args = ap.parse_args()
+
 print("registered environments:", ", ".join(envs.registered()))
 
-# 1. Train BOTH scenarios through the identical runner code path.
-for name in ("hit_les_reduced", "burgers_reduced"):
+# 1. Train every scenario family through the identical runner code path.
+for name in ((args.env,) if args.env else SMOKE_SCENARIOS):
     env = envs.make(name)
     runner = Runner(
         env, FleetConfig(n_envs=2, bank_size=4),

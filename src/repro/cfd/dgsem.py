@@ -1,6 +1,6 @@
-"""Discontinuous-Galerkin spectral element (DGSEM) operators on a periodic
-Cartesian mesh — the JAX port of FLEXI's core discretization (Krais et al.
-2021), restricted to the homogeneous-isotropic-turbulence box the paper uses.
+"""Discontinuous-Galerkin spectral element (DGSEM) operators on a Cartesian
+mesh — the JAX port of FLEXI's core discretization (Krais et al. 2021),
+with per-direction boundary conditions (periodic or prescribed-face).
 
 Layout convention for nodal state arrays:
 
@@ -9,6 +9,31 @@ Layout convention for nodal state arrays:
 with element axes at positions (-7, -6, -5), intra-element GLL node axes at
 (-4, -3, -2) and the channel axis last.  `...` carries the environment batch;
 all operators are batch-transparent and therefore `vmap`/`shard_map` friendly.
+Element counts (and element sizes) may differ per direction — operators that
+scale to physical space accept a per-direction `jac`.
+
+Boundary-condition abstraction and its layout contract
+------------------------------------------------------
+Face arrays are *right-face-indexed*: a trace/flux array for direction d has
+the node axis of d removed, and entry e along the element axis of d holds the
+face BETWEEN element e and element e+1.  Two helpers make the surface
+exchange explicit about topology:
+
+  * `set_face(arr, d, index, value)` overwrites one face slab (index -1 is
+    the +L domain-boundary face in a right-face-indexed array; index 0 is
+    the -0 boundary face in a LEFT-face-indexed array).
+  * `left_faces(f_right, d, lo_value=None)` converts right-face-indexed to
+    left-face-indexed (entry e = face on the LEFT of element e).  With
+    `lo_value=None` the direction is periodic (the wrap is a `jnp.roll`);
+    passing `lo_value` makes the direction non-periodic by overriding
+    element 0's left face — whose rolled entry is the meaningless wrap —
+    with the prescribed boundary flux/trace.
+
+A non-periodic direction therefore costs exactly two `set_face` overrides on
+top of the periodic path (one per wall), and the periodic path is unchanged
+byte-for-byte.  `dg_gradient` / `dg_divergence` take an optional per-direction
+`bc` tuple built on these helpers; `cfd/channel.py` assembles the full
+no-slip/wall-model Navier-Stokes RHS from them.
 
 The per-direction derivative is a tiny (n x n) matrix contraction applied over
 a huge batch of elements — the solver's dominant FLOP term.  The jnp path here
@@ -112,6 +137,49 @@ def neighbor_traces(u: jax.Array, direction: int) -> tuple[jax.Array, jax.Array]
     return hi, right
 
 
+def set_face(face_arr: jax.Array, direction: int, index: int,
+             value: jax.Array) -> jax.Array:
+    """Overwrite one domain-boundary face slab of a face-indexed array.
+
+    `face_arr` has the node axis of `direction` removed (trace/flux layout);
+    `value` has the element axis of `direction` removed as well (one face
+    slab, broadcastable).  `index` is -1 for the +L face of a
+    right-face-indexed array, 0 for the -0 face of a left-face-indexed one.
+    """
+    axis = ELEM_AXIS[direction] + face_arr.ndim + 1
+    moved = jnp.moveaxis(face_arr, axis, 0)
+    moved = moved.at[index].set(value)
+    return jnp.moveaxis(moved, 0, axis)
+
+
+def left_faces(f_right: jax.Array, direction: int,
+               lo_value: jax.Array | None = None) -> jax.Array:
+    """Right-face-indexed -> left-face-indexed along `direction`.
+
+    Entry e of the result is the face on the LEFT of element e.  Periodic by
+    default (element 0 wraps to the last face); a non-periodic direction
+    passes `lo_value`, the prescribed boundary flux/trace at the -0 domain
+    face, which overrides the meaningless wrapped entry.
+    """
+    axis = ELEM_AXIS[direction] + f_right.ndim + 1
+    out = jnp.roll(f_right, shift=1, axis=axis)
+    if lo_value is not None:
+        out = set_face(out, direction, 0, lo_value)
+    return out
+
+
+def _per_direction_jac(dg: DGParams | None, jac) -> tuple[float, float, float]:
+    """Resolve the reference-to-physical scaling for each direction."""
+    if jac is None:
+        if dg is None:
+            raise ValueError("pass jac= (scalar or per-direction) when no "
+                             "DGParams is given")
+        return (dg.jac,) * 3
+    if isinstance(jac, (tuple, list)):
+        return tuple(jac)
+    return (jac,) * 3
+
+
 def surface_lift(
     du: jax.Array,
     flux_jump_right: jax.Array,
@@ -133,10 +201,13 @@ def surface_lift(
 
 def dg_gradient(
     q: jax.Array,
-    dg: DGParams,
+    dg: DGParams | None,
     d_matrix: jax.Array,
     inv_w_end: tuple[float, float],
     vol_derivs: tuple[jax.Array, jax.Array, jax.Array] | None = None,
+    *,
+    jac: float | tuple[float, float, float] | None = None,
+    bc: tuple | None = None,
 ) -> jax.Array:
     """BR1-style DG gradient of nodal field q (..., K,K,K, n,n,n, C).
 
@@ -144,21 +215,32 @@ def dg_gradient(
     new leading channel of size 3 appended at the end: (..., C, 3).
     `vol_derivs` optionally supplies the three reference-space volume
     derivatives (e.g. from the fused Pallas kernel kernels.ops.dg_derivative3).
+
+    `jac` overrides `dg.jac` (scalar or per-direction) for anisotropic
+    meshes.  `bc` is None (fully periodic) or a 3-tuple whose entry d is
+    None (periodic along d) or a pair `(q_lo, q_hi)` of prescribed boundary
+    FACE states (one face slab each, see module docstring); the prescribed
+    state replaces the central average at the two domain faces — a weak
+    Dirichlet trace for the gradient.
     """
+    jacs = _per_direction_jac(dg, jac)
     grads = []
     for d in range(3):
         vol = deriv_along(q, d_matrix, d) if vol_derivs is None else vol_derivs[d]
         q_left, q_right = neighbor_traces(q, d)
         q_star_right = 0.5 * (q_left + q_right)  # face between e, e+1
         # jump contributions: at node N of e use face e|e+1, at node 0 of e
-        # use face e-1|e  (roll back).
-        elem_axis = ELEM_AXIS[d] + q_star_right.ndim + 1
+        # use face e-1|e  (roll back; non-periodic overrides the wall faces).
         lo, hi = _face_slices(q, d)
+        bc_d = bc[d] if bc is not None else None
+        if bc_d is not None:
+            q_star_right = set_face(q_star_right, d, -1, bc_d[1])
+        q_star_left = left_faces(q_star_right, d,
+                                 lo_value=bc_d[0] if bc_d is not None else None)
         jump_right = q_star_right - hi
-        q_star_left = jnp.roll(q_star_right, shift=1, axis=elem_axis)
         jump_left = q_star_left - lo
         g = surface_lift(vol, jump_right, jump_left, d, inv_w_end)
-        grads.append(g * dg.jac)
+        grads.append(g * jacs[d])
     return jnp.stack(grads, axis=-1)
 
 
@@ -197,9 +279,12 @@ def flux_differencing(
 def dg_divergence(
     fluxes: tuple[jax.Array, jax.Array, jax.Array],
     fluxes_star: tuple[jax.Array, jax.Array, jax.Array],
-    dg: DGParams,
+    dg: DGParams | None,
     d_matrix: jax.Array,
     inv_w_end: tuple[float, float],
+    *,
+    jac: float | tuple[float, float, float] | None = None,
+    bc: tuple | None = None,
 ) -> jax.Array:
     """Strong-form DG divergence with prescribed interface fluxes.
 
@@ -207,18 +292,24 @@ def dg_divergence(
     `fluxes_star[d]`  : numerical flux on the face between e and e+1 along d,
                         shape like a trace (..., K,K,K, n,n, C) with the node
                         axis of direction d removed.
+    `jac` / `bc` as in `dg_gradient` — `bc[d]` is None or `(f_lo, f_hi)`
+    prescribed boundary NUMERICAL fluxes replacing the wrapped faces.
     Returns -div(F) in physical coordinates (the RHS convention).
     """
+    jacs = _per_direction_jac(dg, jac)
     out = None
     for d in range(3):
         vol = deriv_along(fluxes[d], d_matrix, d)
         lo, hi = _face_slices(fluxes[d], d)
         f_star_right = fluxes_star[d]
-        elem_axis = ELEM_AXIS[d] + f_star_right.ndim + 1
-        f_star_left = jnp.roll(f_star_right, shift=1, axis=elem_axis)
+        bc_d = bc[d] if bc is not None else None
+        if bc_d is not None:
+            f_star_right = set_face(f_star_right, d, -1, bc_d[1])
+        f_star_left = left_faces(f_star_right, d,
+                                 lo_value=bc_d[0] if bc_d is not None else None)
         jump_right = f_star_right - hi
         jump_left = f_star_left - lo
-        div_d = surface_lift(vol, jump_right, jump_left, d, inv_w_end) * dg.jac
+        div_d = surface_lift(vol, jump_right, jump_left, d, inv_w_end) * jacs[d]
         out = div_d if out is None else out + div_d
     return -out
 
@@ -226,9 +317,11 @@ def dg_divergence(
 def quadrature_mean(q: jax.Array, dg: DGParams) -> jax.Array:
     """Volume average of nodal field q over the whole box (per batch entry).
 
-    q: (..., K,K,K, n,n,n, C) -> (..., C)
+    q: (..., Kx,Ky,Kz, n,n,n, C) -> (..., C).  The element count is read off
+    the array, so anisotropic (Kx != Ky != Kz) meshes average correctly.
     """
     _, w = dg.nodes_weights()
     w = jnp.asarray(w, dtype=q.dtype) * 0.5  # reference [-1,1] -> unit mass
+    n_elem_total = q.shape[-7] * q.shape[-6] * q.shape[-5]
     q = jnp.einsum("...xyzijkc,i,j,k->...c", q, w, w, w)
-    return q / (dg.n_elem**3)
+    return q / n_elem_total

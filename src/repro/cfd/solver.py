@@ -193,8 +193,7 @@ def navier_stokes_rhs(
         f_star = f_star_adv - f_star_visc
         f_nodes = f_adv_nodes - f_visc
         lo, hi = dgsem._face_slices(f_nodes, d)
-        elem_axis = dgsem.ELEM_AXIS[d] + f_star.ndim + 1
-        f_star_left = jnp.roll(f_star, shift=1, axis=elem_axis)
+        f_star_left = dgsem.left_faces(f_star, d)  # periodic wrap
         div_d = dgsem.surface_lift(vol, f_star - hi, f_star_left - lo, d, inv_w_end)
         div_d = div_d * dg.jac
         rhs = -div_d if rhs is None else rhs - div_d

@@ -15,13 +15,15 @@ from .base import ActionSpec, Env, EnvState, ObsSpec, StepResult, as_env, init_s
 from .registry import make, register, registered
 
 # Importing the scenario modules populates the registry.
-from . import burgers, hit_les  # noqa: F401  (registration side effects)
+from . import burgers, channel, hit_les  # noqa: F401  (registration side effects)
 from .burgers import BurgersEnv
+from .channel import ChannelEnv
 from .hit_les import HITLESEnv
 
 __all__ = [
     "ActionSpec",
     "BurgersEnv",
+    "ChannelEnv",
     "Env",
     "EnvState",
     "HITLESEnv",

@@ -1,0 +1,136 @@
+"""Wall-modeled channel-flow control scenario on the generic Env protocol.
+
+The third registered scenario, and the first NON-PERIODIC one: it proves the
+Env protocol carries an anisotropic state layout (Kx != Ky != Kz elements,
+unequal box lengths) and weak wall boundary conditions end to end through
+the unchanged orchestrator/rollout/runner.  See cfd/channel.py for the
+physics (mixed-BC DGSEM, Reichardt wall model, pressure-gradient forcing).
+
+Obs    : the two layers of wall-adjacent elements, (2*Kx*Kz, n, n, n, 3)
+         velocity nodes normalized by u_bulk.  Top-wall elements are
+         mirrored (y node axis flipped, v_y negated) so both walls present
+         the same orientation to the shared policy trunk — "away from the
+         wall" is always increasing node index.
+Action : per-wall-element wall-stress scaling a in [0, a_max]; a = 1
+         applies the equilibrium wall model as-is (the static baseline).
+Reward : 2 exp(-l/alpha) - 1 with l the quadrature-weighted relative L2
+         error of the x-z mean velocity profile against the Reichardt
+         log-law reference — the profile analog of the paper's spectral
+         reward.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..cfd import channel, spectra
+from ..cfd.channel import ChannelConfig
+from .base import ActionSpec, EnvState, ObsSpec, StepResult
+from .registry import register
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelEnv:
+    """Plane-channel WMLES, per-wall-element stress-scaling control."""
+
+    cfg: ChannelConfig
+
+    @property
+    def obs_spec(self) -> ObsSpec:
+        n = self.cfg.n
+        return ObsSpec(n_elements=self.cfg.n_wall_elements,
+                       spatial=(n, n, n), channels=3,
+                       scale=self.cfg.u_bulk)
+
+    @property
+    def action_spec(self) -> ActionSpec:
+        return ActionSpec(n_elements=self.cfg.n_wall_elements, low=0.0,
+                          high=self.cfg.a_max)
+
+    @property
+    def n_actions(self) -> int:
+        return self.cfg.n_actions
+
+    def u_ref(self) -> jax.Array:
+        """Reference mean profile (config-time constant, baked into step)."""
+        return jnp.asarray(channel.reference_profile(self.cfg), jnp.float32)
+
+    def initial_state_bank(self, key: jax.Array, n: int) -> jax.Array:
+        return channel.make_state_bank(key, self.cfg, n)
+
+    def reset_from_bank(self, bank: jax.Array, index: jax.Array
+                        ) -> tuple[EnvState, jax.Array]:
+        u = jnp.take(bank, index, axis=0)
+        state = EnvState(u=u, t_step=jnp.zeros((), jnp.int32))
+        return state, self.observe(state)
+
+    def observe(self, state: EnvState) -> jax.Array:
+        """Wall-adjacent element velocities, both walls mirrored into the
+        same near-wall orientation: (..., 2*Kx*Kz, n, n, n, 3)."""
+        u = state.u
+        from ..cfd.equations import conservative_to_primitive
+        _, vel, _, _ = conservative_to_primitive(u)
+        ky_axis = vel.ndim - 7 + 1  # (..., Kx, Ky, Kz, n, n, n, 3)
+        bot = jax.lax.index_in_dim(vel, 0, ky_axis, keepdims=False)
+        top = jax.lax.index_in_dim(vel, vel.shape[ky_axis] - 1, ky_axis,
+                                   keepdims=False)
+        # mirror the top wall: flip the y node axis, negate wall-normal v
+        top = jnp.flip(top, axis=-3)
+        top = top.at[..., 1].multiply(-1.0)
+        kx, _, kz = self.cfg.n_elem
+        n = self.cfg.n
+        batch = vel.shape[: vel.ndim - 7]
+        shape = batch + (kx * kz, n, n, n, 3)
+        obs = jnp.concatenate([bot.reshape(shape), top.reshape(shape)],
+                              axis=-5)
+        return obs / self.cfg.u_bulk
+
+    def _split_action(self, action: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+        """(..., 2*Kx*Kz) -> per-wall (..., Kx, Kz) scaling fields."""
+        cfg = self.cfg
+        kx, _, kz = cfg.n_elem
+        a = jnp.clip(action, 0.0, cfg.a_max)
+        grid = a.shape[:-1] + (kx, kz)
+        bot = a[..., : kx * kz].reshape(grid)
+        top = a[..., kx * kz:].reshape(grid)
+        return bot, top
+
+    def step(self, state: EnvState, action: jax.Array) -> StepResult:
+        """One MDP transition with the shared in-graph blow-up guard: a
+        non-finite advance reverts the state and floors the reward at -1
+        (see cfd/env.py for the rationale)."""
+        cfg = self.cfg
+        scale_bot, scale_top = self._split_action(action)
+        u_next = channel.advance_rl_interval(state.u, scale_bot, scale_top,
+                                             cfg)
+        finite = jnp.all(jnp.isfinite(u_next),
+                         axis=tuple(range(u_next.ndim - 7, u_next.ndim)))
+        u_next = jnp.where(
+            finite[..., None, None, None, None, None, None, None],
+            u_next, state.u)
+        ops = cfg.operators()
+        prof = channel.mean_velocity_profile(u_next, cfg, ops)
+        ell = channel.profile_error(prof, self.u_ref(), ops)
+        reward = jnp.where(finite,
+                           spectra.reward_from_error(ell, cfg.alpha), -1.0)
+        t_next = state.t_step + 1
+        done = t_next >= cfg.n_actions
+        next_state = EnvState(u=u_next, t_step=t_next)
+        return StepResult(next_state, self.observe(next_state), reward, done)
+
+
+@register("channel_wm")
+def _channel_wm(**overrides) -> ChannelEnv:
+    """Default scale: N=3, 3x4x3 elements, full-length episodes."""
+    return ChannelEnv(cfg=ChannelConfig(**overrides))
+
+
+@register("channel_wm_reduced")
+def _channel_reduced(**overrides) -> ChannelEnv:
+    """CPU-friendly smoke scale: 2x3x2 elements, short episodes."""
+    defaults = dict(n_elem=(2, 3, 2), t_end=0.3, dt_rl=0.1)
+    defaults.update(overrides)
+    return ChannelEnv(cfg=ChannelConfig(**defaults))

@@ -1,0 +1,25 @@
+"""Pallas API-drift shims shared by the TPU kernels.
+
+jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams` (and has
+moved it between modules before); the kernels only use it for grid
+dimension semantics, which are a pure scheduling hint.  Resolve whichever
+name the installed jax exposes and degrade to "no hint" rather than pinning
+a jax version.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """`compiler_params` value for `pl.pallas_call`, or None if the installed
+    jax has neither spelling (the call then runs with compiler defaults)."""
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is None:
+            continue
+        try:
+            return cls(dimension_semantics=tuple(dimension_semantics))
+        except TypeError:  # field renamed/removed in a future drift
+            continue
+    return None

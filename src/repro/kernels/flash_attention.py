@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from ._compat import tpu_compiler_params
+
 _NEG_INF = float("-inf")
 
 
@@ -137,11 +139,7 @@ def flash_attention(
         block_q=block_q, block_k=block_k, n_kv_blocks=n_kv_blocks,
         sq=sq, skv=skv,
     )
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:  # API drift guard
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
     out = pl.pallas_call(
         kern,
         grid=grid,

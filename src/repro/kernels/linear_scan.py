@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from ._compat import tpu_compiler_params
+
 
 def _kernel(
     q_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
@@ -136,11 +138,7 @@ def linear_scan(
         _kernel, chunk=chunk, n_chunks=n_chunks,
         decay_before_read=decay_before_read, has_u=has_u,
     )
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"))
-    except TypeError:
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("parallel", "arbitrary"))
     o, s_fin = pl.pallas_call(
         kern,
         grid=(b, n_chunks),

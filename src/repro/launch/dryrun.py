@@ -55,9 +55,7 @@ def _memory_analysis(compiled) -> dict:
 
 def _cost_analysis(compiled) -> dict:
     try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):
-            ca = ca[0]
+        ca = hlo_analysis.cost_analysis_dict(compiled)
         return {k: float(v) for k, v in ca.items()
                 if k in ("flops", "bytes accessed", "optimal_seconds",
                          "utilization operand")}

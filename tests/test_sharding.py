@@ -45,7 +45,7 @@ def test_param_specs_2d_weight():
 
 def test_param_specs_nondivisible_falls_back():
     # AbstractMesh: divisibility logic only needs mesh.shape
-    mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+    mesh = shd.abstract_mesh((1, 2), ("data", "model"))
     rules = shd.AxisRules(mesh)
     specs = shd.param_specs({"w": jnp.ones((8, 25))}, {"w": ("embed", "heads")},
                             rules)
@@ -92,7 +92,8 @@ def test_lower_cell_on_host_mesh():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     lowered, meta = specs.lower_cell(cfg, shape, mesh)
     compiled = lowered.compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    from repro.launch.hlo_analysis import cost_analysis_dict
+    assert cost_analysis_dict(compiled)["flops"] > 0
     shape_d = ShapeConfig("tiny_decode", 64, 4, "decode")
     lowered, _ = specs.lower_cell(cfg, shape_d, mesh)
     assert lowered.compile() is not None
