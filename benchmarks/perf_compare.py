@@ -40,6 +40,44 @@ def _load(arch: str, shape: str, tag: str = "") -> dict | None:
         return json.load(f)
 
 
+def run_wall_model(quick: bool = True) -> dict:
+    """Kernel-vs-ref timings for the Reichardt wall-model inversion — the
+    start of the solver-kernel perf trajectory.  On TPU the kernel column is
+    the compiled fused launch; off-TPU it runs in Pallas interpret mode (so
+    only the `ref` column is meaningful there — the row is still recorded to
+    keep the artifact schema stable across backends).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import default_impl, ops
+
+    backend = jax.default_backend()
+    common.row("# perf_wall_model", "backend", "points", "impl", "median_s",
+               "note")
+    sizes = [4096] if quick else [4096, 65536, 1048576]
+    kw = dict(y_m=0.05, nu=5e-3, kappa=0.41, iters=8)
+    results = []
+    for p in sizes:
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        u_par = jax.random.uniform(ks[0], (p,), minval=1e-3, maxval=3.0)
+        rho = jax.random.uniform(ks[1], (p,), minval=0.8, maxval=1.2)
+        for impl in ("ref", "kernel"):
+            # jit BOTH columns: the kernel wrapper is already jitted, and an
+            # eager ref column would record dispatch overhead as kernel wins
+            fn = jax.jit(lambda u, r, impl=impl:
+                         ops.wall_model_tau(u, r, impl=impl, **kw))
+            t = common.timeit(fn, u_par, rho, warmup=2, iters=5)
+            note = ("interpret-mode (oracle check, not perf)"
+                    if impl == "kernel" and backend != "tpu" else "")
+            common.row("perf_wall_model", backend, p, impl, f"{t:.6f}", note)
+            results.append({"backend": backend, "points": p, "impl": impl,
+                            "median_s": t})
+    common.save_json("perf_wall_model.json",
+                     {"default_impl": default_impl(), "rows": results})
+    return {"n_rows": len(results)}
+
+
 def run(quick: bool = True) -> dict:
     common.row("# perf_compare", "arch", "shape", "variant",
                "collective_s", "compute_s", "memory_s", "frac", "note")
@@ -60,7 +98,9 @@ def run(quick: bool = True) -> dict:
     if n == 0:
         print("no tagged perf artifacts found; run the §Perf commands in "
               "EXPERIMENTS.md first")
-    return {"n_comparisons": n}
+    out = {"n_comparisons": n}
+    out.update(run_wall_model(quick=quick))
+    return out
 
 
 if __name__ == "__main__":

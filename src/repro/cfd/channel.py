@@ -46,8 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dgsem, equations, gll
+from ..kernels.ref import reichardt_uplus  # canonical formula (kernel oracle)
 from .equations import GasParams
-from .solver import _RK_A, _RK_B
+from .solver import _RK_A, _RK_B, kernel_grad_nut
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,10 +80,22 @@ class ChannelConfig:
     a_max: float = 2.0         # wall-stress scaling bound (1.0 = model as-is)
     # initial-state perturbation amplitude (fraction of u_bulk)
     perturb: float = 0.08
+    # Pallas kernels for the gradient, eddy-viscosity and wall-model hot
+    # spots.  None = auto (kernels.default_impl(): ON and compiled on TPU,
+    # off elsewhere); True/False force the choice (off-TPU forced-on runs in
+    # interpret mode — the parity-test configuration).
+    use_kernels: bool | None = None
 
     @property
     def n(self) -> int:
         return self.n_poly + 1
+
+    @property
+    def kernels_enabled(self) -> bool:
+        """Resolved `use_kernels`: the backend policy unless forced."""
+        from ..kernels.policy import resolve_use_kernels
+
+        return resolve_use_kernels(self.use_kernels)
 
     @property
     def dxs(self) -> tuple[float, float, float]:
@@ -152,14 +165,8 @@ class ChannelConfig:
 
 
 # --- wall law / reference profile -------------------------------------------
-def reichardt_uplus(y_plus, kappa: float = 0.41, xp=jnp):
-    """Reichardt's composite law of the wall u+(y+): blends the viscous
-    sublayer (u+ = y+), buffer layer and log law smoothly — valid at every
-    y+, which is what lets one formula serve both the wall model and the
-    reference profile at smoke-scale Reynolds numbers."""
-    return (xp.log1p(kappa * y_plus) / kappa
-            + 7.8 * (1.0 - xp.exp(-y_plus / 11.0)
-                     - (y_plus / 11.0) * xp.exp(-y_plus / 3.0)))
+# `reichardt_uplus` lives in kernels/ref.py (it is the wall-model kernel's
+# oracle formula) and is re-exported here for the profile/reference users.
 
 
 def node_coords(cfg: ChannelConfig, direction: int) -> np.ndarray:
@@ -258,14 +265,16 @@ def wall_stress_magnitude(u_par: jax.Array, rho_w: jax.Array, y_m: float,
     Geometrically-damped fixed point: in the viscous limit (u+ ~ y+) the
     damped map lands on the exact laminar stress mu u_par / y_m in one step,
     and in the log regime it contracts; `wm_iters` iterations unroll into
-    the jitted RHS.
+    the jitted RHS.  With `cfg.kernels_enabled` the whole batched inversion
+    runs as one fused Pallas launch (kernels/wall_model.py); the ref path is
+    its bit-identical oracle.
     """
-    u_tau = jnp.sqrt(cfg.nu * u_par / y_m + 1e-12)  # laminar initial guess
-    for _ in range(cfg.wm_iters):
-        y_plus = y_m * u_tau / cfg.nu
-        u_plus = jnp.maximum(reichardt_uplus(y_plus, cfg.kappa), 1e-6)
-        u_tau = jnp.sqrt(u_tau * u_par / u_plus + 1e-14)
-    return rho_w * u_tau**2
+    from ..kernels import ops as kops
+
+    return kops.wall_model_tau(
+        u_par, jnp.broadcast_to(rho_w, jnp.shape(u_par)), y_m=y_m, nu=cfg.nu,
+        kappa=cfg.kappa, iters=cfg.wm_iters,
+        impl="kernel" if cfg.kernels_enabled else "ref")
 
 
 def _wall_slab(arr: jax.Array, side: int) -> jax.Array:
@@ -350,12 +359,21 @@ def channel_rhs(u: jax.Array, scale_bot: jax.Array, scale_top: jax.Array,
         q_lo = _wall_slab(lo_tr, 0).at[..., 1].set(0.0)
         q_hi = _wall_slab(hi_tr, 1).at[..., 1].set(0.0)
         bc_grad = (None, (q_lo, q_hi), None)
-    grad_prim = dgsem.dg_gradient(q_prim, None, d_matrix, inv_w_end,
-                                  jac=cfg.jacs, bc=bc_grad)
-    grad_v = grad_prim[..., 0:3, :]
-    s_mag = equations.strain_magnitude(equations.strain_rate(grad_v))
     cs_nodes = jnp.full(u.shape[:-1], cfg.cs_sgs, u.dtype)
-    nu_t = equations.eddy_viscosity(cs_nodes, cfg.delta_filter, s_mag)
+    if cfg.kernels_enabled:
+        # fused Pallas hot spots, shared with solver.navier_stokes_rhs: the
+        # BC-aware surface lift composes with the kernel volume derivatives
+        # through dg_gradient's vol_derivs hook.
+        grad_prim, nu_t = kernel_grad_nut(q_prim, cs_nodes, d_matrix,
+                                          inv_w_end, cfg.delta_filter,
+                                          jac=cfg.jacs, bc=bc_grad)
+        grad_v = grad_prim[..., 0:3, :]
+    else:
+        grad_prim = dgsem.dg_gradient(q_prim, None, d_matrix, inv_w_end,
+                                      jac=cfg.jacs, bc=bc_grad)
+        grad_v = grad_prim[..., 0:3, :]
+        s_mag = equations.strain_magnitude(equations.strain_rate(grad_v))
+        nu_t = equations.eddy_viscosity(cs_nodes, cfg.delta_filter, s_mag)
 
     if cfg.wall:
         g_lo, g_hi = wall_fluxes(u, scale_bot, scale_top, cfg, ops)

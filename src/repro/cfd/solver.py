@@ -63,9 +63,11 @@ class HITConfig:
     k_max: int = 9
     alpha: float = 0.4
     cs_max: float = 0.5
-    # Pallas kernels for the gradient + eddy-viscosity hot spots (interpret
-    # mode off-TPU; the jnp path is the oracle). Default off on CPU.
-    use_kernels: bool = False
+    # Pallas kernels for the gradient + eddy-viscosity hot spots.  None =
+    # auto (kernels.default_impl(): ON and compiled on TPU, off elsewhere);
+    # True/False force the choice (off-TPU forced-on runs in interpret mode —
+    # the parity-test configuration).
+    use_kernels: bool | None = None
     # synthetic DNS target spectrum (von Karman-Pao)
     k_peak: float = 4.0
     k_eta: float = 48.0
@@ -73,6 +75,13 @@ class HITConfig:
     @property
     def dg(self) -> DGParams:
         return DGParams(self.n_poly, self.n_elem, self.length)
+
+    @property
+    def kernels_enabled(self) -> bool:
+        """Resolved `use_kernels`: the backend policy unless forced."""
+        from ..kernels.policy import resolve_use_kernels
+
+        return resolve_use_kernels(self.use_kernels)
 
     @property
     def k_tke(self) -> float:
@@ -123,6 +132,38 @@ class HITConfig:
         }
 
 
+def kernel_grad_nut(
+    q_prim: jax.Array,
+    cs_nodes: jax.Array,
+    d_matrix: jax.Array,
+    inv_w_end: tuple[float, float],
+    delta: float,
+    *,
+    dg: DGParams | None = None,
+    jac=None,
+    bc: tuple | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused Pallas hot spots shared by the HIT and channel RHS assemblies:
+    one-HBM-pass 3-direction volume derivative feeding the (optionally
+    BC-aware) DG gradient, and the fused strain -> nu_t chain.  `dg`/`jac`/
+    `bc` forward to dgsem.dg_gradient; the jnp branches of the callers are
+    the validated oracle (tests/test_kernel_parity.py)."""
+    from ..kernels import ops as kops
+
+    n = q_prim.shape[-2]
+    qb = q_prim.reshape((-1, n, n, n, q_prim.shape[-1]))
+    vols = kops.dg_derivative3(qb, d_matrix, impl="kernel")
+    vol_derivs = tuple(v.reshape(q_prim.shape) for v in vols)
+    grad_prim = dgsem.dg_gradient(q_prim, dg, d_matrix, inv_w_end,
+                                  vol_derivs=vol_derivs, jac=jac, bc=bc)
+    grad_v = grad_prim[..., 0:3, :]
+    nu_t = kops.smagorinsky_nut(
+        grad_v.reshape((-1, 3, 3)), cs_nodes.reshape((-1,)), delta,
+        impl="kernel",
+    ).reshape(cs_nodes.shape)
+    return grad_prim, nu_t
+
+
 def broadcast_cs(cs_elem: jax.Array, cfg: HITConfig) -> jax.Array:
     """Per-element coefficients (..., K,K,K) -> nodal field (..., K,K,K,n,n,n)."""
     n = cfg.n_poly + 1
@@ -151,23 +192,10 @@ def navier_stokes_rhs(
     e_spec = u[..., 4] / rho
     prim = (rho, vel, p, e_spec)
     q_prim = jnp.concatenate([vel, temp[..., None]], axis=-1)
-    if cfg.use_kernels:
-        # fused Pallas hot spots: one HBM pass for the 3-direction volume
-        # derivative, fused strain->nu_t chain (kernels/{dg_derivative,
-        # smagorinsky}.py; jnp path below is the validated oracle).
-        from ..kernels import ops as kops
-
-        n = cfg.n_poly + 1
-        qb = q_prim.reshape((-1, n, n, n, q_prim.shape[-1]))
-        vols = kops.dg_derivative3(qb, d_matrix)
-        vol_derivs = tuple(v.reshape(q_prim.shape) for v in vols)
-        grad_prim = dgsem.dg_gradient(q_prim, dg, d_matrix, inv_w_end,
-                                      vol_derivs=vol_derivs)
+    if cfg.kernels_enabled:
+        grad_prim, nu_t = kernel_grad_nut(q_prim, cs_nodes, d_matrix,
+                                          inv_w_end, cfg.delta_filter, dg=dg)
         grad_v = grad_prim[..., 0:3, :]
-        nu_t = kops.smagorinsky_nut(
-            grad_v.reshape((-1, 3, 3)), cs_nodes.reshape((-1,)),
-            cfg.delta_filter,
-        ).reshape(cs_nodes.shape)
     else:
         grad_prim = dgsem.dg_gradient(q_prim, dg, d_matrix, inv_w_end)
         grad_v = grad_prim[..., 0:3, :]

@@ -2,12 +2,20 @@
 
   dg_derivative    fused 3-direction DGSEM derivative (solver volume terms)
   smagorinsky      fused strain-rate -> eddy-viscosity chain (paper Eq. 3)
+  wall_model       batched Reichardt law-of-the-wall fixed-point inversion
+                   (the channel WMLES per-step hot loop)
   flash_attention  blockwise-softmax attention (GQA/causal/SWA/softcap)
   linear_scan      chunk-parallel gated linear recurrence (RWKV6/SSM)
 
 Use through `ops` (impl dispatch + autodiff glue); `ref` holds the pure-jnp
-oracles every kernel is validated against (tests/test_kernels.py).
+oracles every kernel is validated against — the three solver kernels in the
+`kernel_parity` CI gate (tests/test_kernel_parity.py), flash_attention and
+linear_scan in tests/test_kernels.py.  `default_impl()`/`default_interpret()`
+are the single backend policy: kernels are ON and compiled when
+`jax.default_backend() == "tpu"`, and interpret-mode oracles elsewhere —
+configs opt out (or force on) via their `use_kernels` field.
 """
 from . import ops, ref
+from .policy import default_impl, default_interpret
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "default_impl", "default_interpret"]

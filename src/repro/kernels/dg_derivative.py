@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .policy import resolve_interpret
+
 
 def _kernel(u_ref, d_ref, du0_ref, du1_ref, du2_ref):
     u = u_ref[...]  # (Bb, n, n, n, C)
@@ -60,7 +62,7 @@ def dg_derivative3(
     d_matrix: jax.Array,
     *,
     block_b: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused (du/dxi_0, du/dxi_1, du/dxi_2) for an element batch.
 
@@ -81,7 +83,7 @@ def dg_derivative3(
         in_specs=[spec, pl.BlockSpec((n, n), lambda i: (0, 0))],
         out_specs=[spec, spec, spec],
         out_shape=[out_shape] * 3,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name="dg_derivative3",
     )(u_p, d_matrix)
     if pad:

@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from ._compat import tpu_compiler_params
+from .policy import resolve_interpret
 
 _NEG_INF = float("-inf")
 
@@ -106,7 +107,7 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = 512,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Flash attention forward; contract identical to kernels.ref.mha.
 
@@ -157,7 +158,7 @@ def flash_attention(
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name="flash_attention_fwd",
         **({"compiler_params": compiler_params} if compiler_params else {}),
     )(qf, kf, vf)

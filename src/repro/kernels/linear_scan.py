@@ -34,6 +34,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from ._compat import tpu_compiler_params
+from .policy import resolve_interpret
 
 
 def _kernel(
@@ -111,7 +112,7 @@ def linear_scan(
     *,
     decay_before_read: bool = False,
     chunk: int = 64,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked gated linear recurrence; contract = kernels.ref.linear_scan.
 
@@ -159,7 +160,7 @@ def linear_scan(
             jax.ShapeDtypeStruct((b, dk, dv), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name="linear_scan",
         **({"compiler_params": compiler_params} if compiler_params else {}),
     )(q, k, v, w, u_in, s0_in)

@@ -1,11 +1,14 @@
 """Public kernel API: impl dispatch + differentiation glue.
 
 Every op takes `impl`:
-  "kernel"     Pallas kernel, interpret=True off-TPU (tests, CPU container),
-               compiled on TPU.  Gradients: custom_vjp with recompute-from-ref
-               backward (fwd speed where it matters; bwd correctness from the
-               oracle — the backward kernels are listed as future work in
-               DESIGN.md §Kernels).
+  None         resolved from `policy.default_impl()`: "kernel" on TPU,
+               "ref" elsewhere (the solver configs' `use_kernels=None` auto).
+  "kernel"     Pallas kernel, interpret mode auto-selected off-TPU (tests,
+               CPU container), compiled on TPU.  Gradients: custom_vjp with
+               recompute-from-ref backward (fwd speed where it matters; bwd
+               correctness from the oracle — the backward kernels are listed
+               as future work in DESIGN.md §Kernels).
+  "ref"        the pure-jnp oracle from ref.py (solver ops).
   "chunked"    pure-jnp flash/chunk-equivalent (differentiable end-to-end,
                compilable on every backend) — the dry-run / training path.
   "naive"      full-materialization reference — tests and tiny shapes only.
@@ -22,35 +25,45 @@ from . import ref
 from .dg_derivative import dg_derivative3 as _dg_pallas
 from .flash_attention import flash_attention as _fa_pallas
 from .linear_scan import linear_scan as _ls_pallas
+from .policy import default_impl
 from .smagorinsky import smagorinsky_nut as _smag_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from .wall_model import wall_model_tau as _wm_pallas
 
 
 # --- dg derivative -----------------------------------------------------------
-def dg_derivative3(u: jax.Array, d_matrix: jax.Array, *, impl: str = "kernel",
+def dg_derivative3(u: jax.Array, d_matrix: jax.Array, *,
+                   impl: str | None = None,
                    block_b: int = 256) -> tuple[jax.Array, ...]:
-    if impl == "kernel":
-        return _dg_pallas(u, d_matrix, block_b=block_b, interpret=not _on_tpu())
+    if (impl or default_impl()) == "kernel":
+        return _dg_pallas(u, d_matrix, block_b=block_b)
     return ref.dg_derivative3(u, d_matrix)
 
 
 # --- smagorinsky -------------------------------------------------------------
 def smagorinsky_nut(grad_v: jax.Array, cs: jax.Array, delta: float, *,
-                    impl: str = "kernel", block_p: int = 2048) -> jax.Array:
-    if impl == "kernel":
-        return _smag_pallas(grad_v, cs, delta, block_p=block_p,
-                            interpret=not _on_tpu())
+                    impl: str | None = None, block_p: int = 2048) -> jax.Array:
+    if (impl or default_impl()) == "kernel":
+        return _smag_pallas(grad_v, cs, delta, block_p=block_p)
     return ref.smagorinsky_nut(grad_v, cs, delta)
+
+
+# --- wall model --------------------------------------------------------------
+def wall_model_tau(u_par: jax.Array, rho_w: jax.Array, *, y_m: float,
+                   nu: float, kappa: float = 0.41, iters: int = 8,
+                   impl: str | None = None, block_p: int = 2048) -> jax.Array:
+    """Reichardt-inverted wall stress for a batch of wall-face points."""
+    if (impl or default_impl()) == "kernel":
+        return _wm_pallas(u_par, rho_w, y_m=y_m, nu=nu, kappa=kappa,
+                          iters=iters, block_p=block_p)
+    return ref.wall_model_tau(u_par, rho_w, y_m=y_m, nu=nu, kappa=kappa,
+                              iters=iters)
 
 
 # --- flash attention ---------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def _fa_with_vjp(q, k, v, causal, window, softcap, scale):
     return _fa_pallas(q, k, v, causal=causal, window=window, softcap=softcap,
-                      scale=scale, interpret=not _on_tpu())
+                      scale=scale)
 
 
 def _fa_fwd(q, k, v, causal, window, softcap, scale):
@@ -98,8 +111,7 @@ def attention(
 # --- gated linear recurrence ---------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
 def _ls_with_vjp(q, k, v, w, u, s0, decay_before_read):
-    return _ls_pallas(q, k, v, w, u, s0, decay_before_read=decay_before_read,
-                      interpret=not _on_tpu())
+    return _ls_pallas(q, k, v, w, u, s0, decay_before_read=decay_before_read)
 
 
 def _ls_fwd(q, k, v, w, u, s0, decay_before_read):

@@ -1,0 +1,42 @@
+"""Backend-driven kernel defaults — the single policy every entry point uses.
+
+The Pallas kernels are the production path on TPU and an interpret-mode
+oracle-check everywhere else.  Rather than each call site hardcoding
+`interpret=True` (which silently de-optimizes real TPU runs) or configs
+hardcoding `use_kernels=False` (which leaves the fused path dead on TPU),
+both questions resolve here from `jax.default_backend()`:
+
+  * `default_impl()`      "kernel" on TPU, "ref" elsewhere — what
+                          `HITConfig`/`ChannelConfig` use when their
+                          `use_kernels` field is left at None (auto).
+  * `default_interpret()` False on TPU (compile for real), True elsewhere
+                          (Pallas interprets; same numerics, any backend) —
+                          what every kernel's `interpret=None` resolves to.
+
+This module is a leaf (imports jax only) so the kernel modules themselves
+can use it without cycling through the package __init__.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_impl() -> str:
+    """Implementation the configs pick when `use_kernels` is None (auto)."""
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: compiled on TPU, interpreted everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """An explicit `interpret` wins; None defers to the backend policy."""
+    return default_interpret() if interpret is None else interpret
+
+
+def resolve_use_kernels(use_kernels: bool | None) -> bool:
+    """Config `use_kernels` field: an explicit choice wins; None = policy.
+    The shared resolver behind HITConfig/ChannelConfig `.kernels_enabled`."""
+    return default_impl() == "kernel" if use_kernels is None else use_kernels

@@ -39,6 +39,39 @@ def smagorinsky_nut(grad_v: jax.Array, cs: jax.Array, delta: float) -> jax.Array
     return (cs * delta) ** 2 * s_mag
 
 
+# --- wall model --------------------------------------------------------------
+def reichardt_uplus(y_plus, kappa: float = 0.41, xp=jnp):
+    """Reichardt's composite law of the wall u+(y+): blends the viscous
+    sublayer (u+ = y+), buffer layer and log law smoothly — valid at every
+    y+, which is what lets one formula serve both the wall model and the
+    reference profile at smoke-scale Reynolds numbers.  `xp` lets the same
+    formula run under numpy for config-time reference profiles
+    (cfd.channel re-exports this)."""
+    return (xp.log1p(kappa * y_plus) / kappa
+            + 7.8 * (1.0 - xp.exp(-y_plus / 11.0)
+                     - (y_plus / 11.0) * xp.exp(-y_plus / 3.0)))
+
+
+def wall_model_tau(u_par: jax.Array, rho_w: jax.Array, *, y_m: float,
+                   nu: float, kappa: float = 0.41,
+                   iters: int = 8) -> jax.Array:
+    """tau_w = rho u_tau^2 by inverting u_par/u_tau = u+(y_m u_tau / nu).
+
+    Geometrically-damped fixed point: in the viscous limit (u+ ~ y+) the
+    damped map lands on the exact laminar stress mu u_par / y_m in one step,
+    and in the log regime it contracts; `iters` iterations unroll into the
+    jitted RHS.  Oracle for kernels/wall_model.py (identical op order).
+    """
+    f32 = jnp.float32
+    up = u_par.astype(f32)
+    u_tau = jnp.sqrt(nu * up / y_m + 1e-12)  # laminar initial guess
+    for _ in range(iters):
+        y_plus = y_m * u_tau / nu
+        u_plus = jnp.maximum(reichardt_uplus(y_plus, kappa), 1e-6)
+        u_tau = jnp.sqrt(u_tau * up / u_plus + 1e-14)
+    return (rho_w.astype(f32) * u_tau**2).astype(u_par.dtype)
+
+
 # --- flash attention ---------------------------------------------------------
 def mha(
     q: jax.Array,

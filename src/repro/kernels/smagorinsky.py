@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .policy import resolve_interpret
+
 
 def _kernel(grad_ref, cs_ref, nut_ref, *, delta: float):
     g = grad_ref[...].astype(jnp.float32)  # (Pb, 9): dv_i/dx_j row-major
@@ -47,7 +49,7 @@ def smagorinsky_nut(
     delta: float,
     *,
     block_p: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """nu_t for point-flattened inputs; matches kernels.ref.smagorinsky_nut.
 
@@ -70,7 +72,7 @@ def smagorinsky_nut(
         ],
         out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((pp,), grad_v.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name="smagorinsky_nut",
     )(g, cs)
     return nut[:p] if pad else nut

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: batched Reichardt law-of-the-wall fixed-point inversion.
+
+The channel scenario's hottest per-step serial chain: every RK stage inverts
+u_par / u_tau = u+(y_m u_tau / nu) at every wall face column to get the
+modeled wall stress tau_w = rho u_tau^2 (cfd/channel.py).  The inversion is
+`iters` dependent sqrt/log1p/exp rounds per point — pure VPU transcendental
+work with zero reuse between points, so XLA's unfused form re-reads u_par and
+the iterate from HBM between rounds.  The fused kernel keeps the whole
+fixed-point chain in VMEM: one read of (u_par, rho_w), one write of tau_w,
+`iters` rounds in registers (2 floats moved per point total).
+
+Layout: point-flattened (P,) wall-face columns — callers flatten whatever
+`(B, n_wall_elems, face_dofs)` batch they carry; grid over P blocks.  The
+scalar wall geometry (y_m, nu, kappa) and the iteration budget are
+compile-time constants.  Matches kernels.ref.wall_model_tau (the oracle;
+identical op order, so the float32 paths agree bit-for-bit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .policy import resolve_interpret
+from .ref import reichardt_uplus
+
+
+def _kernel(upar_ref, rho_ref, tau_ref, *, y_m: float, nu: float,
+            kappa: float, iters: int):
+    u_par = upar_ref[...].astype(jnp.float32)  # (Pb,)
+    rho_w = rho_ref[...].astype(jnp.float32)   # (Pb,)
+    # geometrically-damped fixed point, laminar initial guess (exact in the
+    # viscous sublayer, contracting in the log layer) — cfd/channel.py docs
+    u_tau = jnp.sqrt(nu * u_par / y_m + 1e-12)
+    for _ in range(iters):
+        y_plus = y_m * u_tau / nu
+        u_plus = jnp.maximum(reichardt_uplus(y_plus, kappa), 1e-6)
+        u_tau = jnp.sqrt(u_tau * u_par / u_plus + 1e-14)
+    tau_ref[...] = (rho_w * u_tau**2).astype(tau_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("y_m", "nu", "kappa", "iters",
+                                             "block_p", "interpret"))
+def wall_model_tau(
+    u_par: jax.Array,
+    rho_w: jax.Array,
+    *,
+    y_m: float,
+    nu: float,
+    kappa: float = 0.41,
+    iters: int = 8,
+    block_p: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """tau_w for an arbitrary batch of wall-face points.
+
+    u_par, rho_w: any (broadcast-identical) shape — tangential matching-point
+    speed and wall density; flattened to (P,) internally.  Returns tau_w with
+    the input shape.  Matches kernels.ref.wall_model_tau.
+    """
+    shape = u_par.shape
+    up = u_par.reshape(-1)
+    rw = rho_w.reshape(-1)
+    p = up.shape[0]
+    block_p = min(block_p, p)
+    pad = (-p) % block_p
+    if pad:
+        # pad with 1s: the fixed point stays finite for any positive input
+        up = jnp.pad(up, (0, pad), constant_values=1.0)
+        rw = jnp.pad(rw, (0, pad), constant_values=1.0)
+    pp = p + pad
+    tau = pl.pallas_call(
+        functools.partial(_kernel, y_m=y_m, nu=nu, kappa=kappa, iters=iters),
+        grid=(pp // block_p,),
+        in_specs=[
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), u_par.dtype),
+        interpret=resolve_interpret(interpret),
+        name="wall_model_tau",
+    )(up, rw)
+    return (tau[:p] if pad else tau).reshape(shape)

@@ -1,0 +1,166 @@
+"""Kernel <-> reference parity gate (`pytest -m kernel_parity -q`).
+
+Every Pallas solver-kernel entry point — `dg_derivative3`, `smagorinsky_nut`
+and `wall_model_tau` — is swept over a dtype x shape x block-size grid in
+interpret mode against its pure-jnp oracle in `kernels/ref.py`, with pinned
+per-kernel tolerances; plus full-path regressions proving a complete RHS /
+env step with `use_kernels=True` matches the reference assembly.  This gate
+is what lets kernels default ON for TPU runs (kernels.default_impl()):
+any future kernel edit that drifts from the oracle fails here first.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import channel, solver
+from repro.cfd.channel import ChannelConfig
+from repro.cfd.solver import HITConfig
+from repro.envs import registry
+from repro.kernels import ops, ref
+from repro.kernels.dg_derivative import dg_derivative3
+from repro.kernels.smagorinsky import smagorinsky_nut
+from repro.kernels.wall_model import wall_model_tau
+
+pytestmark = pytest.mark.kernel_parity
+
+# Pinned per-kernel tolerances.  float32 paths do the same math in the same
+# order (kernels accumulate in f32); bfloat16 tolerances cover the 8-bit
+# mantissa of the in/out casts.
+TOL = {
+    "dg_derivative3": {jnp.float32: dict(rtol=2e-4, atol=1e-5),
+                       jnp.bfloat16: dict(rtol=4e-2, atol=4e-2)},
+    "smagorinsky_nut": {jnp.float32: dict(rtol=2e-5, atol=1e-7),
+                        jnp.bfloat16: dict(rtol=4e-2, atol=4e-3)},
+    "wall_model_tau": {jnp.float32: dict(rtol=1e-5, atol=1e-8),
+                       jnp.bfloat16: dict(rtol=4e-2, atol=4e-4)},
+}
+
+
+def _assert_close(kernel_name, dtype, got, want):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOL[kernel_name][dtype])
+
+
+# --- dg_derivative3 ---------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,c,b,block_b", [
+    (4, 5, 16, 8),    # even split
+    (6, 3, 10, 4),    # padding (10 % 4 != 0)
+    (8, 1, 7, 16),    # block larger than batch
+    (4, 4, 27, 9),    # K^3 element batch, odd block
+])
+def test_dg_derivative3_parity(n, c, b, block_b, dtype):
+    u = jax.random.normal(jax.random.PRNGKey(5), (b, n, n, n, c), dtype)
+    d = jax.random.normal(jax.random.PRNGKey(6), (n, n), jnp.float32)
+    outs = dg_derivative3(u, d, block_b=block_b, interpret=True)
+    wants = ref.dg_derivative3(u, d)
+    assert all(o.dtype == u.dtype for o in outs)
+    for got, want in zip(outs, wants):
+        _assert_close("dg_derivative3", dtype, got, want)
+
+
+# --- smagorinsky_nut --------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("p,block_p", [
+    (17, 8),       # padding
+    (2048, 512),   # even multi-block
+    (64, 128),     # block larger than batch
+])
+def test_smagorinsky_parity(p, block_p, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    grad_v = jax.random.normal(ks[0], (p, 3, 3), dtype)
+    cs = jax.random.uniform(ks[1], (p,), minval=0.0, maxval=0.5).astype(dtype)
+    got = smagorinsky_nut(grad_v, cs, 0.1, block_p=block_p, interpret=True)
+    want = ref.smagorinsky_nut(grad_v, cs, 0.1)
+    assert got.dtype == grad_v.dtype
+    _assert_close("smagorinsky_nut", dtype, got, want)
+
+
+# --- wall_model_tau ---------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,block_p", [
+    ((64,), 32),         # flat even split
+    ((2, 24, 16), 128),  # (B, n_wall_elems, face_dofs) batch, padding
+    ((7,), 64),          # tiny odd batch, block larger than batch
+])
+def test_wall_model_parity(shape, block_p, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    # u_par spans the viscous sublayer through the log layer
+    u_par = jax.random.uniform(ks[0], shape, minval=1e-3,
+                               maxval=3.0).astype(dtype)
+    rho_w = jax.random.uniform(ks[1], shape, minval=0.8,
+                               maxval=1.2).astype(dtype)
+    kw = dict(y_m=0.05, nu=5e-3, kappa=0.41, iters=8)
+    got = wall_model_tau(u_par, rho_w, block_p=block_p, interpret=True, **kw)
+    want = ref.wall_model_tau(u_par, rho_w, **kw)
+    assert got.shape == shape and got.dtype == u_par.dtype
+    _assert_close("wall_model_tau", dtype, got, want)
+
+
+def test_wall_model_ops_dispatch_matches_ref():
+    """The ops-layer dispatch ("kernel" forced, off-TPU interpret) and "ref"
+    agree — the exact switch ChannelConfig.kernels_enabled flips."""
+    u_par = jnp.linspace(1e-3, 2.0, 37)
+    rho = jnp.ones_like(u_par)
+    kw = dict(y_m=0.1, nu=1e-3, iters=8)
+    got = ops.wall_model_tau(u_par, rho, impl="kernel", **kw)
+    want = ops.wall_model_tau(u_par, rho, impl="ref", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL["wall_model_tau"][jnp.float32])
+
+
+# --- full-path regressions --------------------------------------------------
+def test_hit_rhs_kernel_path_matches_reference():
+    """Complete HIT RHS with use_kernels forced on (interpret mode off-TPU)
+    vs the pure-jnp assembly."""
+    from repro.cfd import initial
+
+    cfg_ref = HITConfig(n_poly=3, n_elem=2, use_kernels=False)
+    cfg_ker = dataclasses.replace(cfg_ref, use_kernels=True)
+    u = initial.sample_initial_state(jax.random.PRNGKey(0), cfg_ref)
+    cs = jnp.full(u.shape[:-1], 0.17, u.dtype)
+    r_ref = solver.navier_stokes_rhs(u, cs, cfg_ref, cfg_ref.operators())
+    r_ker = solver.navier_stokes_rhs(u, cs, cfg_ker, cfg_ker.operators())
+    np.testing.assert_allclose(np.asarray(r_ker), np.asarray(r_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_channel_rhs_kernel_path_matches_reference():
+    """Complete wall-BC channel RHS through all three kernels (volume
+    derivative, eddy viscosity, wall-model inversion) vs the reference."""
+    cfg_ref = ChannelConfig(n_elem=(2, 3, 2), use_kernels=False)
+    cfg_ker = dataclasses.replace(cfg_ref, use_kernels=True)
+    u = channel.sample_initial_state(jax.random.PRNGKey(1), cfg_ref)
+    kx, _, kz = cfg_ref.n_elem
+    n = cfg_ref.n
+    scale = jnp.broadcast_to(jnp.float32(1.3), (kx, kz, n, n))
+    r_ref = channel.channel_rhs(u, scale, scale, cfg_ref, cfg_ref.operators())
+    r_ker = channel.channel_rhs(u, scale, scale, cfg_ker, cfg_ker.operators())
+    np.testing.assert_allclose(np.asarray(r_ker), np.asarray(r_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_channel_env_step_kernel_parity():
+    """Full `channel_wm` env transition (one RL interval: n_substeps x 5 RK
+    stages, obs + reward) with use_kernels=True matches the reference path
+    within float32 tolerance — the acceptance gate for default-on kernels."""
+    env_ref = registry.make("channel_wm_reduced", use_kernels=False)
+    env_ker = registry.make("channel_wm_reduced", use_kernels=True)
+    bank = env_ref.initial_state_bank(jax.random.PRNGKey(2), 1)
+    state, obs0 = env_ref.reset_from_bank(bank, jnp.int32(0))
+    action = jnp.full((env_ref.action_spec.n_elements,), 1.2, jnp.float32)
+    res_ref = env_ref.step(state, action)
+    res_ker = env_ker.step(state, action)
+    np.testing.assert_allclose(np.asarray(res_ker.state.u),
+                               np.asarray(res_ref.state.u),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res_ker.obs),
+                               np.asarray(res_ref.obs),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(res_ker.reward), float(res_ref.reward),
+                               atol=1e-4)
+    assert bool(res_ker.done) == bool(res_ref.done)

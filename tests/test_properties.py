@@ -91,6 +91,65 @@ def test_linear_scan_decay_contracts_state(t, b, w_val, dbr):
 
 
 @_settings
+@given(st.floats(1e-3, 3.0), st.floats(1e-3, 2.9), st.floats(0.01, 0.3),
+       st.floats(1e-4, 1e-2))
+def test_wall_model_tau_monotone_in_matching_velocity(u1, du, y_m, nu):
+    """tau_w from the Reichardt inversion must increase with the
+    matching-point velocity — faster outer flow never lowers the modeled
+    wall friction (the sign the RL action relies on)."""
+    rho = jnp.ones(())
+    kw = dict(y_m=y_m, nu=nu, iters=8)
+    t1 = float(ref.wall_model_tau(jnp.asarray(u1), rho, **kw))
+    t2 = float(ref.wall_model_tau(jnp.asarray(u1 + du), rho, **kw))
+    assert t2 >= t1 * (1.0 - 1e-6)
+    assert t1 > 0.0
+
+
+@_settings
+@given(st.floats(1e-3, 3.0), st.floats(0.01, 0.3), st.floats(1e-4, 1e-2))
+def test_wall_model_fixed_point_converges_within_budget(u_par, y_m, nu):
+    """The damped fixed point must be converged at the production iteration
+    budget: doubling `iters` moves tau_w by < 1%, and the converged u_tau
+    satisfies the wall law u_par/u_tau = u+(y_m u_tau / nu)."""
+    rho = jnp.ones(())
+    t8 = float(ref.wall_model_tau(jnp.asarray(u_par), rho, y_m=y_m, nu=nu,
+                                  iters=8))
+    t16 = float(ref.wall_model_tau(jnp.asarray(u_par), rho, y_m=y_m, nu=nu,
+                                   iters=16))
+    assert abs(t16 - t8) <= 1e-2 * abs(t16) + 1e-10
+    u_tau = np.sqrt(t16)  # rho = 1
+    u_plus = float(ref.reichardt_uplus(jnp.asarray(y_m * u_tau / nu)))
+    np.testing.assert_allclose(u_par / u_tau, u_plus, rtol=2e-2)
+
+
+@_settings
+@given(st.floats(0.0, 2.0))
+def test_wall_flux_affine_in_action_scale(a):
+    """The wall flux is affine in the action: the advective (pressure) part
+    is a-independent and the modeled viscous stress scales linearly, so
+    f(a) = f(0) + a * (f(1) - f(0)) — in particular a=1 recovers the
+    unscaled equilibrium wall model exactly."""
+    from repro.cfd import channel
+    from repro.cfd.channel import ChannelConfig
+
+    cfg = ChannelConfig(n_elem=(2, 3, 2))
+    ops_ch = cfg.operators()
+    u = channel.sample_initial_state(jax.random.PRNGKey(11), cfg)
+    kx, _, kz = cfg.n_elem
+    n = cfg.n
+
+    def fluxes(scale):
+        s = jnp.full((kx, kz, n, n), scale, jnp.float32)
+        lo, hi = channel.wall_fluxes(u, s, s, cfg, ops_ch)
+        return np.asarray(lo), np.asarray(hi)
+
+    f0, f1, fa = fluxes(0.0), fluxes(1.0), fluxes(float(a))
+    for lo_hi in range(2):
+        want = f0[lo_hi] + a * (f1[lo_hi] - f0[lo_hi])
+        np.testing.assert_allclose(fa[lo_hi], want, rtol=1e-5, atol=1e-7)
+
+
+@_settings
 @given(st.integers(0, 1000), st.integers(1, 64), st.integers(1, 64))
 def test_ring_buffer_slot_positions_valid(pos, length, _unused):
     """Every warm ring-buffer slot holds a position in (pos-L, pos]."""
