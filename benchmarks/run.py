@@ -18,7 +18,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="larger sweeps (slower)")
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: fig3,fig4,fig5,launch,roofline")
+                    help="comma-separated subset: fig3,fig4,fig5,channel,"
+                         "channel_p,launch,roofline,perf")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -33,6 +34,8 @@ def main() -> None:
          training_curves.run),
         ("channel", "channel WMLES training + wall-model baselines",
          training_curves.run_channel),
+        ("channel_p", "channel WMLES (velocity + wall-pressure obs) training",
+         training_curves.run_channel_p),
         ("launch", "launch overhead (paper Sec. 3.3)", launch_overhead.run),
         ("roofline", "roofline table (dry-run artifacts)", roofline.run),
         ("perf", "perf hillclimb comparisons (EXPERIMENTS.md §Perf)",

@@ -28,42 +28,57 @@ def constant_cs_return(orch: Orchestrator, cs_value: float) -> float:
     return constant_action_return(orch.env, orch.test_state(), cs_value)
 
 
-def run_channel(quick: bool = True, iterations: int | None = None) -> dict:
-    """Training curve + static baselines for the wall-model channel scenario.
+def _run_channel_family(env_name: str, tag: str, quick: bool,
+                        iterations: int | None) -> dict:
+    """Shared channel-scenario harness: training curve + the two static
+    wall-model baselines, tagged and saved under `tag`.
 
     The static baselines are the channel analogs of the paper's Fig. 5
     bottom: the equilibrium wall model applied as-is (a = 1) and no wall
     stress at all (a = 0) — the trained per-element scaling should at least
     match the equilibrium model on the profile-error reward.
     """
-    env = envs.make("channel_wm_reduced" if quick else "channel_wm")
+    env = envs.make(f"{env_name}_reduced" if quick else env_name)
     iters = iterations or (12 if quick else 60)
-    results = {}
-    common.row("# channel_training", "n_envs", "iteration", "return_norm")
+    results = {"env": env_name,
+               "obs_channels": list(env.obs_spec.channel_names)}
+    common.row(f"# {tag}_training", "n_envs", "iteration", "return_norm")
     runner = Runner(
         env, FleetConfig(n_envs=2, bank_size=9),
         ppo_cfg=PPOConfig(),
         run_cfg=RunnerConfig(n_iterations=iters, eval_every=10**9,
                              checkpoint_every=10**9,
-                             checkpoint_dir="/tmp/bench_channel",
+                             checkpoint_dir=f"/tmp/bench_{tag}",
                              async_checkpoint=False),
     )
     history = runner.train(resume=False)
     curve = [r["return_norm"] for r in history if "return_norm" in r]
     for i, r in enumerate(curve):
         if i % max(1, len(curve) // 6) == 0 or i == len(curve) - 1:
-            common.row("channel", 2, i, f"{r:.4f}")
+            common.row(tag, 2, i, f"{r:.4f}")
     results["curve_2_envs"] = curve
     results["trained_eval"] = float(runner.orch.evaluate(runner.params))
     equil = constant_cs_return(runner.orch, 1.0)
     no_model = constant_cs_return(runner.orch, 0.0)
     results["baseline_equilibrium_wm_a1"] = equil
     results["baseline_no_wall_stress_a0"] = no_model
-    common.row("channel_baselines", "equilibrium_wm", f"{equil:.4f}")
-    common.row("channel_baselines", "no_wall_stress", f"{no_model:.4f}")
-    common.row("channel_baselines", "rl_trained", f"{results['trained_eval']:.4f}")
-    common.save_json("channel_training.json", results)
+    common.row(f"{tag}_baselines", "equilibrium_wm", f"{equil:.4f}")
+    common.row(f"{tag}_baselines", "no_wall_stress", f"{no_model:.4f}")
+    common.row(f"{tag}_baselines", "rl_trained", f"{results['trained_eval']:.4f}")
+    common.save_json(f"{tag}_training.json", results)
     return results
+
+
+def run_channel(quick: bool = True, iterations: int | None = None) -> dict:
+    """Training curve + static baselines, 3-channel `channel_wm`."""
+    return _run_channel_family("channel_wm", "channel", quick, iterations)
+
+
+def run_channel_p(quick: bool = True, iterations: int | None = None) -> dict:
+    """Training curve + static baselines for `channel_wm_p` — the
+    4-channel (velocity + near-wall pressure) variant, so its curve lands
+    next to the HIT and 3-channel channel ones."""
+    return _run_channel_family("channel_wm_p", "channel_p", quick, iterations)
 
 
 def run(quick: bool = True, iterations: int | None = None) -> dict:
@@ -110,11 +125,14 @@ def run(quick: bool = True, iterations: int | None = None) -> dict:
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--env", default="hit", choices=("hit", "channel_wm"),
+    ap.add_argument("--env", default="hit",
+                    choices=("hit", "channel_wm", "channel_wm_p"),
                     help="which scenario's training curve to produce")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     if args.env == "channel_wm":
         run_channel(quick=not args.full)
+    elif args.env == "channel_wm_p":
+        run_channel_p(quick=not args.full)
     else:
         run(quick=not args.full)

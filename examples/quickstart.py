@@ -1,8 +1,8 @@
 """Quickstart: the paper's RL-CFD loop through the env registry.
 
 Any registered scenario — the paper's 3-D HIT-LES, the 1-D Burgers control
-problem, or the wall-modeled channel flow — trains through the same ~10
-lines:
+problem, or the wall-modeled channel flow (velocity-only or the 4-channel
+velocity + wall-pressure variant) — trains through the same ~10 lines:
 
     from repro import envs
     from repro.core.orchestrator import FleetConfig
@@ -30,7 +30,8 @@ from repro.core import policy, rollout
 from repro.core.orchestrator import FleetConfig
 from repro.core.runner import Runner, RunnerConfig
 
-SMOKE_SCENARIOS = ("hit_les_reduced", "burgers_reduced", "channel_wm_reduced")
+SMOKE_SCENARIOS = ("hit_les_reduced", "burgers_reduced", "channel_wm_reduced",
+                   "channel_wm_p_reduced")
 
 ap = argparse.ArgumentParser(description=__doc__)
 ap.add_argument("--env", default=None, choices=envs.registered(),
@@ -51,7 +52,9 @@ for name in ((args.env,) if args.env else SMOKE_SCENARIOS):
     )
     history = runner.train(resume=False)
     returns = [f"{r['return_norm']:+.3f}" for r in history]
-    print(f"{name}: obs {env.obs_spec.shape} act {env.action_spec.shape} "
+    print(f"{name}: obs {env.obs_spec.shape} "
+          f"[{','.join(env.obs_spec.channel_names)}] "
+          f"act {env.action_spec.shape} "
           f"T={env.n_actions} -> returns {' '.join(returns)}")
 
 # 2. Under the hood: the policy heads come from the env's declarative specs

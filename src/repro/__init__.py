@@ -1,0 +1,8 @@
+"""JAX/Pallas reproduction of 'Deep Reinforcement Learning for
+Computational Fluid Dynamics on HPC Systems' (Relexi), grown toward a
+production-scale system.
+
+A regular package (not a namespace package) so tools that walk the source
+tree — `pytest --doctest-modules src/repro/envs` in the docs CI job, most
+prominently — resolve `repro.*` module names and relative imports.
+"""

@@ -154,6 +154,12 @@ class ChannelConfig:
         """Wall-adjacent elements over BOTH walls: 2 * Kx * Kz."""
         return 2 * self.n_elem[0] * self.n_elem[2]
 
+    @property
+    def tau_wall(self) -> float:
+        """Target wall shear stress rho u_tau^2 — the classic wall-pressure
+        normalization scale (p'_rms ~ 2-3 tau_w in channel flow)."""
+        return self.rho0 * self.u_tau**2
+
     def operators(self) -> dict:
         _, w = gll.gll_nodes_weights(self.n_poly)
         return {
@@ -255,6 +261,48 @@ def make_state_bank(key: jax.Array, cfg: ChannelConfig,
                     n_states: int) -> jax.Array:
     keys = jax.random.split(key, n_states)
     return jax.vmap(lambda k: sample_initial_state(k, cfg))(keys)
+
+
+# --- near-wall observation fields --------------------------------------------
+def wall_observation(field: jax.Array, cfg: ChannelConfig, *,
+                     flip_sign_channel: int | None = None) -> jax.Array:
+    """Extract + mirror the wall-adjacent element layers of a nodal field.
+
+    field: (..., Kx, Ky, Kz, n, n, n, C) per-node quantity.  The ky=0 and
+    ky=Ky-1 element layers are selected and the top wall is mirrored (y node
+    axis flipped; channel `flip_sign_channel`, if given, negated — e.g. the
+    wall-normal velocity) so both walls present the same orientation to a
+    shared policy trunk: "away from the wall" is always increasing node
+    index.  Returns (..., 2*Kx*Kz, n, n, n, C), bottom wall first.
+    """
+    ky_axis = field.ndim - 7 + 1  # (..., Kx, Ky, Kz, n, n, n, C)
+    bot = jax.lax.index_in_dim(field, 0, ky_axis, keepdims=False)
+    top = jax.lax.index_in_dim(field, field.shape[ky_axis] - 1, ky_axis,
+                               keepdims=False)
+    top = jnp.flip(top, axis=-3)
+    if flip_sign_channel is not None:
+        top = top.at[..., flip_sign_channel].multiply(-1.0)
+    kx, _, kz = cfg.n_elem
+    n = cfg.n
+    batch = field.shape[: field.ndim - 7]
+    shape = batch + (kx * kz, n, n, n, field.shape[-1])
+    return jnp.concatenate([bot.reshape(shape), top.reshape(shape)], axis=-5)
+
+
+def wall_velocity_observation(u: jax.Array, cfg: ChannelConfig) -> jax.Array:
+    """Wall-adjacent element velocities, (..., 2*Kx*Kz, n, n, n, 3),
+    UN-normalized (the env divides by its declared channel scale)."""
+    _, vel, _, _ = equations.conservative_to_primitive(u)
+    return wall_observation(vel, cfg, flip_sign_channel=1)
+
+
+def wall_pressure_observation(u: jax.Array, cfg: ChannelConfig) -> jax.Array:
+    """Near-wall static-pressure fluctuation p - p0 at the wall-adjacent
+    element nodes, (..., 2*Kx*Kz, n, n, n, 1), UN-normalized (the env
+    divides by `cfg.tau_wall`).  Mirrored like the velocity field so both
+    walls share one orientation; pressure is a scalar, so no sign flip."""
+    _, _, p, _ = equations.conservative_to_primitive(u)
+    return wall_observation((p - cfg.p0)[..., None], cfg)
 
 
 # --- wall model -------------------------------------------------------------

@@ -1,15 +1,24 @@
 """The paper's policy network (Table 2), generalized over env specs.
 
 Input : per-element nodal observations (..., E, *spatial, C) — E = K^3 and
-        3-D spatial for the HIT scenario, E = K and 1-D for Burgers.
+        3-D spatial for the HIT scenario, E = K and 1-D for Burgers.  C is
+        the length of the env's DECLARED channel tuple
+        (`ObsSpec.channel_specs`), never a hard-coded count: the trunk's
+        input width follows the declaration (3 velocity channels for HIT,
+        1 for Burgers, 4 velocity+wall-pressure for `channel_wm_p`), and
+        each channel's declared `gain` is applied at the trunk input
+        (`PolicyConfig.in_gains`) to re-balance channels whose O(1)
+        normalization still leaves them small/large next to their siblings.
+        All-unity gains compile to the identity — the pre-refactor graph.
 Output: Gaussian policy over the per-element bounded scalar action,
         mean = low + (high-low) * sigmoid(conv(x)), state-independent
         learnable log-std (TF-Agents' default for continuous PPO).
 
 The heads are built from the environment's declarative `ObsSpec` /
 `ActionSpec` (`PolicyConfig.from_specs`) — nothing here knows which solver
-produced the observations.  For the paper's N=5 HIT case (n=6, 3-D) the
-stack reproduces Table 2 exactly (3,293 parameters):
+produced the observations.  For the paper's N=5 HIT case (n=6, 3-D, the
+3-channel velocity declaration) the stack reproduces Table 2 exactly
+(3,293 parameters):
 
     Conv3D k3 f8 zero-pad -> 6^3 x 8   ReLU
     Conv3D k3 f8 no-pad   -> 4^3 x 8   ReLU
@@ -40,22 +49,43 @@ from .. import nn
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
     n_nodes: int = 6          # GLL nodes per direction = N+1
-    channels: int = 3         # observation channels
+    channels: int = 3         # observation channels (trunk input width)
     cs_max: float = 0.5       # action upper bound (Table-2 name kept)
     log_std_init: float = -1.6  # std ~ 0.2 in sigmoid-space
     n_dims: int = 3           # spatial rank of per-element obs (3-D HIT, 1-D Burgers)
     act_low: float = 0.0      # action lower bound
+    # Per-channel input gains from the env's declared ChannelSpec.gain,
+    # applied as obs * in_gains before the first conv.  None (or all 1.0)
+    # skips the multiply entirely, keeping legacy envs bit-identical.
+    in_gains: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        if self.in_gains is not None and len(self.in_gains) != self.channels:
+            raise ValueError(f"{len(self.in_gains)} input gains declared "
+                             f"for {self.channels} channels")
 
     @classmethod
     def from_specs(cls, obs_spec, action_spec, *,
                    log_std_init: float = -1.6) -> "PolicyConfig":
-        """Build the head configuration from an env's declarative specs."""
+        """Build the head configuration from an env's declarative specs:
+        trunk input width = the declared channel count, input gains = the
+        declared per-channel gains."""
         spatial = tuple(obs_spec.spatial)
         if len(set(spatial)) != 1:
             raise ValueError(f"anisotropic per-element grids unsupported: {spatial}")
+        gains = tuple(getattr(obs_spec, "channel_gains", ()) or ())
         return cls(n_nodes=spatial[0], channels=obs_spec.channels,
                    cs_max=action_spec.high, act_low=action_spec.low,
-                   n_dims=len(spatial), log_std_init=log_std_init)
+                   n_dims=len(spatial), log_std_init=log_std_init,
+                   in_gains=gains or None)
+
+    @property
+    def active_gains(self) -> tuple[float, ...] | None:
+        """The input-gain vector, or None when it would be the identity
+        (lengths are checked against `channels` at construction)."""
+        if self.in_gains and any(g != 1.0 for g in self.in_gains):
+            return self.in_gains
+        return None
 
 
 def _conv_plan(n: int) -> list[tuple[int, int, str]]:
@@ -92,6 +122,9 @@ def _trunk_apply(params: list[dict], cfg: PolicyConfig, obs: jax.Array) -> jax.A
     """obs (..., E, *spatial, C) -> per-element scalar (..., E)."""
     plan = _conv_plan(cfg.n_nodes)
     x = obs
+    gains = cfg.active_gains
+    if gains is not None:  # declared per-channel input normalization
+        x = x * jnp.asarray(gains, x.dtype)
     for i, (p, (_k, _f, pad)) in enumerate(zip(params, plan)):
         x = nn.convnd(p, x, ndim=cfg.n_dims, padding=pad)
         if i < len(params) - 1:

@@ -6,12 +6,15 @@
     print(envs.registered())
 
 Every scenario implements the same pure `reset/step/observe` contract with
-declarative obs/action specs (envs/base.py), so the whole training stack —
+declarative obs/action specs (envs/base.py) — including a NAMED observation
+channel tuple (`ObsSpec.channel_specs`) — so the whole training stack —
 policy heads, rollout scan, fleet orchestration, PPO — is generic over the
 physics (the paper's "easy integration of various HPC solvers" modularity
-claim, jit-native).
+claim, jit-native).  See docs/adding_an_environment.md for the
+scenario-authoring guide.
 """
-from .base import ActionSpec, Env, EnvState, ObsSpec, StepResult, as_env, init_state
+from .base import (ActionSpec, ChannelSpec, Env, EnvState, ObsSpec,
+                   StepResult, as_env, init_state, velocity_channels)
 from .registry import make, register, registered
 
 # Importing the scenario modules populates the registry.
@@ -24,6 +27,7 @@ __all__ = [
     "ActionSpec",
     "BurgersEnv",
     "ChannelEnv",
+    "ChannelSpec",
     "Env",
     "EnvState",
     "HITLESEnv",
@@ -34,4 +38,5 @@ __all__ = [
     "make",
     "register",
     "registered",
+    "velocity_channels",
 ]

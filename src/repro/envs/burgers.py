@@ -4,6 +4,10 @@ Proves the env abstraction end-to-end: a completely different solver
 (1-D Burgers DGSEM, per-element eddy-viscosity control, 1-D specs) trains
 through the *unchanged* runner/orchestrator/rollout/PPO stack that the
 3-D HIT-LES scenario uses.  See cfd/burgers1d.py for the physics.
+
+Observation channels (named, per `ObsSpec.channel_specs`): the single
+scalar field 'u' at every element node, normalized by the forcing-scale
+rms velocity u_rms.
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import jax.numpy as jnp
 
 from ..cfd import burgers1d, spectra
 from ..cfd.burgers1d import BurgersConfig
-from .base import ActionSpec, EnvState, ObsSpec, StepResult
+from .base import ActionSpec, ChannelSpec, EnvState, ObsSpec, StepResult
 from .registry import register
 
 
@@ -27,7 +31,7 @@ class BurgersEnv:
     @property
     def obs_spec(self) -> ObsSpec:
         return ObsSpec(n_elements=self.cfg.n_elem, spatial=(self.cfg.n,),
-                       channels=1, scale=self.cfg.u_rms)
+                       channel_specs=(ChannelSpec("u", scale=self.cfg.u_rms),))
 
     @property
     def action_spec(self) -> ActionSpec:

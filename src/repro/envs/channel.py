@@ -6,11 +6,17 @@ unequal box lengths) and weak wall boundary conditions end to end through
 the unchanged orchestrator/rollout/runner.  See cfd/channel.py for the
 physics (mixed-BC DGSEM, Reichardt wall model, pressure-gradient forcing).
 
-Obs    : the two layers of wall-adjacent elements, (2*Kx*Kz, n, n, n, 3)
-         velocity nodes normalized by u_bulk.  Top-wall elements are
-         mirrored (y node axis flipped, v_y negated) so both walls present
-         the same orientation to the shared policy trunk — "away from the
-         wall" is always increasing node index.
+Obs    : the two layers of wall-adjacent elements.  Channels are declared
+         by name in `ObsSpec.channel_specs`:
+           * base `channel_wm`: ('u_x', 'u_y', 'u_z') velocity nodes,
+             normalized by u_bulk — (2*Kx*Kz, n, n, n, 3);
+           * `channel_wm_p` (obs_pressure=True): the same three plus
+             'p_wall', the near-wall static-pressure fluctuation p - p0
+             normalized by the wall shear stress rho u_tau^2 —
+             (2*Kx*Kz, n, n, n, 4).
+         Top-wall elements are mirrored (y node axis flipped, v_y negated)
+         so both walls present the same orientation to the shared policy
+         trunk — "away from the wall" is always increasing node index.
 Action : per-wall-element wall-stress scaling a in [0, a_max]; a = 1
          applies the equilibrium wall model as-is (the static baseline).
 Reward : 2 exp(-l/alpha) - 1 with l the quadrature-weighted relative L2
@@ -27,22 +33,34 @@ import jax.numpy as jnp
 
 from ..cfd import channel, spectra
 from ..cfd.channel import ChannelConfig
-from .base import ActionSpec, EnvState, ObsSpec, StepResult
+from .base import (ActionSpec, ChannelSpec, EnvState, ObsSpec, StepResult,
+                   velocity_channels)
 from .registry import register
 
 
 @dataclasses.dataclass(frozen=True)
 class ChannelEnv:
-    """Plane-channel WMLES, per-wall-element stress-scaling control."""
+    """Plane-channel WMLES, per-wall-element stress-scaling control.
+
+    With `obs_pressure=True` the observation gains a fourth named channel:
+    the near-wall pressure fluctuation normalized by rho u_tau^2 (the RL
+    analog of HydroGym/drlfoam-style multi-field probes).  Its declared
+    policy-input gain of 0.5 re-balances the channel against the O(1)
+    velocities (p'_rms ~ 2-3 tau_w in channel flow).
+    """
 
     cfg: ChannelConfig
+    obs_pressure: bool = False
 
     @property
     def obs_spec(self) -> ObsSpec:
         n = self.cfg.n
+        chans = velocity_channels(3, self.cfg.u_bulk)
+        if self.obs_pressure:
+            chans = chans + (ChannelSpec("p_wall", scale=self.cfg.tau_wall,
+                                         gain=0.5),)
         return ObsSpec(n_elements=self.cfg.n_wall_elements,
-                       spatial=(n, n, n), channels=3,
-                       scale=self.cfg.u_bulk)
+                       spatial=(n, n, n), channel_specs=chans)
 
     @property
     def action_spec(self) -> ActionSpec:
@@ -67,25 +85,16 @@ class ChannelEnv:
         return state, self.observe(state)
 
     def observe(self, state: EnvState) -> jax.Array:
-        """Wall-adjacent element velocities, both walls mirrored into the
-        same near-wall orientation: (..., 2*Kx*Kz, n, n, n, 3)."""
-        u = state.u
-        from ..cfd.equations import conservative_to_primitive
-        _, vel, _, _ = conservative_to_primitive(u)
-        ky_axis = vel.ndim - 7 + 1  # (..., Kx, Ky, Kz, n, n, n, 3)
-        bot = jax.lax.index_in_dim(vel, 0, ky_axis, keepdims=False)
-        top = jax.lax.index_in_dim(vel, vel.shape[ky_axis] - 1, ky_axis,
-                                   keepdims=False)
-        # mirror the top wall: flip the y node axis, negate wall-normal v
-        top = jnp.flip(top, axis=-3)
-        top = top.at[..., 1].multiply(-1.0)
-        kx, _, kz = self.cfg.n_elem
-        n = self.cfg.n
-        batch = vel.shape[: vel.ndim - 7]
-        shape = batch + (kx * kz, n, n, n, 3)
-        obs = jnp.concatenate([bot.reshape(shape), top.reshape(shape)],
-                              axis=-5)
-        return obs / self.cfg.u_bulk
+        """Named-channel near-wall observation, both walls mirrored into the
+        same orientation (cfd/channel.py wall_*_observation): velocities
+        over u_bulk, plus the p_wall fluctuation over tau_wall when
+        `obs_pressure` — (..., 2*Kx*Kz, n, n, n, C)."""
+        obs = channel.wall_velocity_observation(state.u, self.cfg)
+        obs = obs / self.cfg.u_bulk
+        if self.obs_pressure:
+            p = channel.wall_pressure_observation(state.u, self.cfg)
+            obs = jnp.concatenate([obs, p / self.cfg.tau_wall], axis=-1)
+        return obs
 
     def _split_action(self, action: jax.Array
                       ) -> tuple[jax.Array, jax.Array]:
@@ -134,3 +143,17 @@ def _channel_reduced(**overrides) -> ChannelEnv:
     defaults = dict(n_elem=(2, 3, 2), t_end=0.3, dt_rl=0.1)
     defaults.update(overrides)
     return ChannelEnv(cfg=ChannelConfig(**defaults))
+
+
+@register("channel_wm_p")
+def _channel_wm_p(**overrides) -> ChannelEnv:
+    """4-channel variant: velocity + near-wall pressure observations."""
+    return ChannelEnv(cfg=ChannelConfig(**overrides), obs_pressure=True)
+
+
+@register("channel_wm_p_reduced")
+def _channel_wm_p_reduced(**overrides) -> ChannelEnv:
+    """CPU-friendly smoke scale of the 4-channel pressure variant."""
+    defaults = dict(n_elem=(2, 3, 2), t_end=0.3, dt_rl=0.1)
+    defaults.update(overrides)
+    return ChannelEnv(cfg=ChannelConfig(**defaults), obs_pressure=True)

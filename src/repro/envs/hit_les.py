@@ -6,6 +6,10 @@ environment (tests/test_envs.py pins the rollout arrays against a direct
 composition of those free functions).  The adapter only declares the specs
 and owns the synthetic-DNS reference spectrum that the reward compares
 against (a numpy config-time constant, baked into the jitted step).
+
+Observation channels (named, per `ObsSpec.channel_specs`): the three
+velocity components ('u_x', 'u_y', 'u_z') at every element node, each
+normalized by the forcing-scale rms velocity u_rms.
 """
 from __future__ import annotations
 
@@ -18,7 +22,7 @@ from ..cfd import env as hit_kernel
 from ..cfd import initial, spectra
 from ..cfd.solver import HITConfig
 from ..configs import relexi_hit
-from .base import ActionSpec, EnvState, ObsSpec, StepResult
+from .base import ActionSpec, EnvState, ObsSpec, StepResult, velocity_channels
 from .registry import register
 
 
@@ -32,7 +36,7 @@ class HITLESEnv:
     def obs_spec(self) -> ObsSpec:
         n = self.cfg.n_poly + 1
         return ObsSpec(n_elements=self.cfg.n_elem**3, spatial=(n, n, n),
-                       channels=3, scale=self.cfg.u_rms)
+                       channel_specs=velocity_channels(3, self.cfg.u_rms))
 
     @property
     def action_spec(self) -> ActionSpec:

@@ -5,6 +5,14 @@ here the registry is the same indirection for the jit-native envs.  A
 factory may accept keyword overrides, which are forwarded verbatim — e.g.
 `envs.make("hit_les_reduced", t_end=1.0)` rebuilds the underlying config
 with that field replaced.
+
+Every registered env declares its observation channels by NAME:
+
+>>> from repro import envs
+>>> envs.make("channel_wm_p_reduced").obs_spec.channel_names
+('u_x', 'u_y', 'u_z', 'p_wall')
+>>> envs.make("burgers_reduced").obs_spec.channel_names
+('u',)
 """
 from __future__ import annotations
 

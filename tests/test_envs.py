@@ -1,11 +1,17 @@
-"""Env-protocol conformance suite + HIT numerical-identity regression.
+"""Env-protocol conformance suite + numerical-identity regressions.
 
 One parametrized contract run against registered environments: specs are
-truthful (shapes/dtypes/bounds), `step` is deterministic given
+truthful (shapes/dtypes/bounds), every env's DECLARED channel names/scales
+match its `observe()` output, `step` is deterministic given
 (state, action), the blow-up guard floors the reward and keeps the carried
 state sane, and `reset_from_bank` round-trips.  Solver-scale envs
 (hit_les_24dof/32dof, burgers_96dof) run the cheap spec/bank checks only;
 the reduced envs additionally exercise stepping and full training.
+
+Bit-identity pins: the named-channel `ObsSpec` refactor must not perturb
+the legacy scenarios — HIT and Burgers observations are pinned bit-for-bit
+against independent re-derivations of the pre-refactor observation path,
+and the HIT rollout against the cfd free functions.
 """
 import dataclasses
 
@@ -34,10 +40,49 @@ def test_specs_declared_and_hashable(name):
                                   *env.obs_spec.spatial,
                                   env.obs_spec.channels)
     assert env.action_spec.low < env.action_spec.high
-    assert env.obs_spec.scale > 0.0  # observe() divides by it; must be usable
     assert env.n_actions >= 1
     hash(env)  # envs are static jit values: must be hashable
     assert isinstance(env, envs.Env)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_channels_declared_by_name(name):
+    """Every registered env declares its observation channels by name, with
+    usable per-channel normalization scales and policy-input gains."""
+    spec = _short(name).obs_spec
+    assert len(spec.channel_specs) == spec.channels >= 1
+    assert all(isinstance(c, envs.ChannelSpec) for c in spec.channel_specs)
+    names = spec.channel_names
+    assert len(set(names)) == len(names)  # unique
+    assert all(n for n in names)          # non-empty
+    # observe() divides each channel by its scale; must be usable
+    assert all(s > 0.0 for s in spec.channel_scales)
+    assert all(g > 0.0 for g in spec.channel_gains)
+
+
+def test_legacy_uniform_scale_property():
+    """`ObsSpec.scale` survives as a derived property for uniform-scale
+    envs and refuses to collapse genuinely mixed per-channel scales."""
+    hit = envs.make("hit_les_reduced")
+    assert hit.obs_spec.scale == hit.cfg.u_rms
+    mixed = envs.make("channel_wm_p_reduced")
+    assert mixed.obs_spec.channel_scales[-1] == mixed.cfg.tau_wall
+    with pytest.raises(ValueError, match="mixed per-channel scales"):
+        mixed.obs_spec.scale
+
+
+@pytest.mark.parametrize("name", REDUCED)
+def test_declared_channels_match_observe(name):
+    """Conformance: the declared channel tuple is truthful about observe()
+    — channel count matches the trailing axis and the spec validates the
+    produced observation (batched and unbatched)."""
+    env = envs.make(name)
+    spec = env.obs_spec
+    bank = env.initial_state_bank(jax.random.PRNGKey(7), 2)
+    state, obs = env.reset_from_bank(bank, jnp.asarray(0))
+    assert obs.shape[-1] == len(spec.channel_names)
+    spec.validate(obs)
+    spec.validate(env.observe(state._replace(u=bank)))  # bank-batched
 
 
 @pytest.mark.parametrize("name", REDUCED)
@@ -115,6 +160,76 @@ def test_policy_heads_from_specs(name):
     assert bool(jnp.all(mean <= env.action_spec.high))
     val = policy_lib.value(params, pcfg, obs)
     assert val.shape == (2,)
+
+
+# --- pre-refactor observation bit-identity ----------------------------------
+def test_hit_obs_bit_identical_to_prerefactor():
+    """The named-channel refactor leaves HIT observations bit-identical to
+    the pre-refactor path: per-element velocity nodes over u_rms, derived
+    here independently of the env/spec machinery."""
+    from repro.cfd.equations import conservative_to_primitive
+
+    env = envs.make("hit_les_reduced")
+    cfg = env.cfg
+    bank = env.initial_state_bank(jax.random.PRNGKey(11), 3)
+    state, obs = env.reset_from_bank(bank, jnp.asarray(2))
+    _, vel, _, _ = conservative_to_primitive(state.u)
+    k, n = cfg.n_elem, cfg.n_poly + 1
+    want = vel.reshape((k**3, n, n, n, 3)) / cfg.u_rms
+    np.testing.assert_array_equal(np.asarray(obs), np.asarray(want))
+
+
+def test_burgers_obs_bit_identical_to_prerefactor():
+    """Same pin for Burgers: observation is exactly u / u_rms."""
+    env = envs.make("burgers_reduced")
+    bank = env.initial_state_bank(jax.random.PRNGKey(12), 3)
+    state, obs = env.reset_from_bank(bank, jnp.asarray(1))
+    np.testing.assert_array_equal(np.asarray(obs),
+                                  np.asarray(state.u / env.cfg.u_rms))
+
+
+def test_channel_p_extends_channel_wm_obs():
+    """`channel_wm_p` is the base channel observation plus one channel: its
+    first three channels are bit-identical to `channel_wm` on the same
+    state, and the fourth is the tau_wall-normalized pressure fluctuation."""
+    base = envs.make("channel_wm_reduced")
+    rich = envs.make("channel_wm_p_reduced")
+    assert base.cfg == rich.cfg
+    bank = base.initial_state_bank(jax.random.PRNGKey(13), 2)
+    state, obs3 = base.reset_from_bank(bank, jnp.asarray(0))
+    _, obs4 = rich.reset_from_bank(bank, jnp.asarray(0))
+    np.testing.assert_array_equal(np.asarray(obs4[..., :3]),
+                                  np.asarray(obs3))
+    # after a step the pressure channel carries real fluctuations
+    res = jax.jit(rich.step)(state, jnp.full(rich.action_spec.shape, 1.0,
+                                             jnp.float32))
+    p_chan = np.asarray(res.obs[..., 3])
+    assert np.all(np.isfinite(p_chan))
+    assert p_chan.std() > 0.0
+
+
+def test_policy_gains_from_declared_channels():
+    """from_specs threads declared per-channel gains into the trunk input;
+    unity gains collapse to None (the identity — no graph change)."""
+    hit = envs.make("hit_les_reduced")
+    pcfg = policy_lib.PolicyConfig.from_specs(hit.obs_spec, hit.action_spec)
+    assert pcfg.in_gains == (1.0, 1.0, 1.0) and pcfg.active_gains is None
+
+    rich = envs.make("channel_wm_p_reduced")
+    pcfg4 = policy_lib.PolicyConfig.from_specs(rich.obs_spec,
+                                               rich.action_spec)
+    assert pcfg4.channels == 4
+    assert pcfg4.active_gains == (1.0, 1.0, 1.0, 0.5)
+    # the gain really reaches the trunk input: doubling the pressure gain
+    # changes the actor output on a pressure-carrying observation
+    params = policy_lib.init(jax.random.PRNGKey(14), pcfg4)
+    bank = rich.initial_state_bank(jax.random.PRNGKey(15), 2)
+    state, _ = rich.reset_from_bank(bank, jnp.asarray(0))
+    obs = rich.step(state, jnp.full(rich.action_spec.shape, 1.0,
+                                    jnp.float32)).obs
+    boosted = dataclasses.replace(pcfg4, in_gains=(1.0, 1.0, 1.0, 1.0e3))
+    a, b = (policy_lib.actor_mean(params, c, obs) for c in (pcfg4, boosted))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
 
 
 # --- HIT numerical identity -------------------------------------------------
