@@ -1,0 +1,139 @@
+"""Fleet-scaling benchmark: broker throughput + pipeline overlap.
+
+    PYTHONPATH=src python -m benchmarks.fleet_scaling
+
+Two measurements on the mixed reduced fleet (hit_les + channel_wm +
+burgers — the heterogeneous benchmark cell):
+
+  * broker throughput — sustained donated-push rate into a per-scenario
+    trajectory ring (items/s and MB/s): the device-resident analog of the
+    paper's KeyDB PUT path, whose Sec. 3.3 transfer overhead this
+    subsystem removes;
+  * pipeline overlap — wall time per iteration of the double-buffered
+    pipelined FleetRunner against the SYNCHRONOUS sum of its own rollout
+    and update phases, on identical jitted programs.  The headline check:
+    pipelined wall time must sit strictly below t_sample + t_update
+    (`overlap_ok` in the artifact — the fleet CI acceptance bar).
+
+Artifact: benchmarks/artifacts/perf_fleet.json.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+
+from . import common
+
+FLEET = ("hit_les_reduced", "channel_wm_reduced", "burgers_reduced")
+
+
+def run_broker(quick: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fleet import broker
+
+    common.row("# perf_fleet_broker", "capacity", "item_mb", "pushes_per_s",
+               "mb_per_s")
+    # a representative trajectory-shaped item: (T, B, E, n, n, n, C) obs +
+    # the scalar lanes, matching the reduced HIT fleet's rollout output
+    T, B, E, n = (3, 8, 8, 4) if quick else (10, 64, 8, 4)
+    item = {
+        "obs": jnp.zeros((T, B, E, n, n, n, 3), jnp.float32),
+        "actions": jnp.zeros((T, B, E), jnp.float32),
+        "rewards": jnp.zeros((T, B), jnp.float32),
+    }
+    item_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(item))
+    results = []
+    for cap in (2, 8):
+        ring = broker.ring_init(item, cap)
+        ring = broker.push_donated(ring, item)  # compile + warm
+        n_push = 50 if quick else 500
+        jax.block_until_ready(ring)
+        t0 = time.perf_counter()
+        for _ in range(n_push):
+            ring = broker.push_donated(ring, item)
+        jax.block_until_ready(ring)
+        dt = time.perf_counter() - t0
+        rate = n_push / dt
+        mbps = rate * item_bytes / 1e6
+        common.row("perf_fleet_broker", cap, round(item_bytes / 1e6, 3),
+                   round(rate, 1), round(mbps, 1))
+        results.append({"capacity": cap, "item_bytes": item_bytes,
+                        "pushes_per_s": rate, "mb_per_s": mbps})
+    return {"items": results}
+
+
+def _fresh_runner(pipelined: bool, tmpdir: str, n_envs: int):
+    from repro import fleet
+    from repro.fleet.pipeline import FleetRunnerConfig
+
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    return fleet.make_fleet_runner(
+        FLEET, total_envs=n_envs,
+        run_cfg=FleetRunnerConfig(
+            n_iterations=10_000, eval_every=10_000, checkpoint_every=10_000,
+            checkpoint_dir=tmpdir, async_checkpoint=False,
+            pipelined=pipelined))
+
+
+def run_pipeline(quick: bool = True) -> dict:
+    import jax
+
+    n_envs = 6 if quick else 24
+    n_iters = 6 if quick else 20
+    base = common.ARTIFACTS + "/fleet_bench"
+
+    # synchronous baseline: per-phase times with host sync between phases
+    sync = _fresh_runner(False, base + "_sync", n_envs)
+    sync.train(1, resume=False)  # compile + warm every program
+    records = []
+    for k in range(1, 1 + n_iters):
+        records.append(sync.run_iteration_sync(k))
+    t_sample = sum(r["t_sample_s"] for r in records) / n_iters
+    t_update = sum(r["t_update_s"] for r in records) / n_iters
+
+    # pipelined: same programs, dispatch-only loop, one sync at the end on
+    # the last UPDATE (params) — the iteration-(N+1) rollout stays in
+    # flight, exactly as it does in steady state
+    pipe = _fresh_runner(True, base + "_pipe", n_envs)
+    pipe.train(1, resume=False)  # compile + warm (incl. prologue)
+    t0 = time.perf_counter()
+    for k in range(1, 1 + n_iters):
+        pipe.run_iteration_pipelined(k)
+    jax.block_until_ready(pipe.params)
+    t_pipe = (time.perf_counter() - t0) / n_iters
+
+    sync_sum = t_sample + t_update
+    overlap = 1.0 - t_pipe / sync_sum if sync_sum > 0 else 0.0
+    common.row("# perf_fleet_pipeline", "n_envs", "iters", "t_sample_s",
+               "t_update_s", "sync_sum_s", "t_pipelined_s",
+               "overlap_fraction", "ok")
+    common.row("perf_fleet_pipeline", n_envs, n_iters, round(t_sample, 4),
+               round(t_update, 4), round(sync_sum, 4), round(t_pipe, 4),
+               round(overlap, 3), t_pipe < sync_sum)
+    return {
+        "n_envs": n_envs,
+        "n_iterations": n_iters,
+        "scenarios": list(FLEET),
+        "t_sample_s": t_sample,
+        "t_update_s": t_update,
+        "sync_sum_s": sync_sum,
+        "t_pipelined_s": t_pipe,
+        "overlap_fraction": overlap,
+        "overlap_ok": bool(t_pipe < sync_sum),
+    }
+
+
+def run(quick: bool = True) -> dict:
+    payload = {"broker": run_broker(quick), "pipeline": run_pipeline(quick)}
+    path = common.save_json("perf_fleet.json", payload)
+    print(f"wrote {path}", flush=True)
+    if not payload["pipeline"]["overlap_ok"]:
+        print("WARNING: pipelined wall time did not beat the synchronous "
+              "phase sum on this host", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -19,13 +19,13 @@ def main() -> None:
                     help="larger sweeps (slower)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig3,fig4,fig5,channel,"
-                         "channel_p,launch,roofline,perf")
+                         "channel_p,launch,roofline,perf,fleet")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (launch_overhead, perf_compare, roofline, scaling_strong,
-                   scaling_weak, training_curves)
+    from . import (fleet_scaling, launch_overhead, perf_compare, roofline,
+                   scaling_strong, scaling_weak, training_curves)
 
     sections = [
         ("fig3", "weak scaling (paper Fig. 3)", scaling_weak.run),
@@ -40,6 +40,8 @@ def main() -> None:
         ("roofline", "roofline table (dry-run artifacts)", roofline.run),
         ("perf", "perf hillclimb comparisons (EXPERIMENTS.md §Perf)",
          perf_compare.run),
+        ("fleet", "heterogeneous fleet: broker throughput + pipeline overlap",
+         fleet_scaling.run),
     ]
     for tag, title, fn in sections:
         if only and tag not in only:

@@ -160,6 +160,20 @@ class ChannelConfig:
         normalization scale (p'_rms ~ 2-3 tau_w in channel flow)."""
         return self.rho0 * self.u_tau**2
 
+    @property
+    def t0(self) -> float:
+        """Background temperature p0 / (rho0 R) — the fluctuation baseline
+        for the near-wall temperature observation."""
+        return self.p0 / (self.rho0 * equations.R_GAS)
+
+    @property
+    def t_tau(self) -> float:
+        """Friction-temperature analog u_tau^2 / cp: the viscous-heating
+        temperature scale at an adiabatic wall (the classic T_tau = q_w /
+        (rho cp u_tau) degenerates to it when q_w is the frictional
+        dissipation tau_w u_tau) — the temperature-channel normalization."""
+        return self.u_tau**2 / equations.CP
+
     def operators(self) -> dict:
         _, w = gll.gll_nodes_weights(self.n_poly)
         return {
@@ -303,6 +317,16 @@ def wall_pressure_observation(u: jax.Array, cfg: ChannelConfig) -> jax.Array:
     walls share one orientation; pressure is a scalar, so no sign flip."""
     _, _, p, _ = equations.conservative_to_primitive(u)
     return wall_observation((p - cfg.p0)[..., None], cfg)
+
+
+def wall_temperature_observation(u: jax.Array, cfg: ChannelConfig
+                                 ) -> jax.Array:
+    """Near-wall temperature fluctuation T - T0 at the wall-adjacent element
+    nodes, (..., 2*Kx*Kz, n, n, n, 1), UN-normalized (the env divides by
+    the friction-temperature scale `cfg.t_tau`).  Mirrored like pressure —
+    a scalar field, no sign flip."""
+    _, _, _, temp = equations.conservative_to_primitive(u)
+    return wall_observation((temp - cfg.t0)[..., None], cfg)
 
 
 # --- wall model -------------------------------------------------------------

@@ -56,13 +56,23 @@ class Orchestrator:
         *,
         mesh: Mesh | None = None,
         seed: int = 0,
+        policy: policy_lib.PolicyFns | None = None,
+        pcfg: policy_lib.PolicyConfig | None = None,
     ):
         self.env = as_env(env)  # legacy HITConfig call sites coerce here
         self.fleet = fleet
         self.mesh = mesh
-        self.pcfg = policy_lib.PolicyConfig.from_specs(
-            self.env.obs_spec, self.env.action_spec
-        )
+        # `policy` plugs an external policy bundle into the jitted fleet
+        # programs (the fleet subsystem's per-scenario multitask heads);
+        # left None, the heads are built from the env's specs exactly as
+        # before.  `pcfg` may override the spec-derived config (it is unused
+        # when `policy` is given).
+        self.policy = policy
+        self.pcfg = pcfg if pcfg is not None else (
+            None if policy is not None else
+            policy_lib.PolicyConfig.from_specs(
+                self.env.obs_spec, self.env.action_spec
+            ))
         key = jax.random.PRNGKey(seed)
         self.bank_key, self.run_key = jax.random.split(key)
         # Device-resident initial-state bank; index -1 is the unseen test state.
@@ -108,7 +118,8 @@ class Orchestrator:
         lines 4-13, all environments at once)."""
         k_init, k_roll = jax.random.split(key)
         u0 = self.draw_initial_states(k_init)
-        return rollout_lib.rollout(params, self.pcfg, self.env, u0, k_roll)
+        return rollout_lib.rollout(params, self.pcfg, self.env, u0, k_roll,
+                                   policy=self.policy)
 
     @partial(jax.jit, static_argnums=(0,))
     def evaluate(self, params: dict) -> jax.Array:
@@ -116,6 +127,6 @@ class Orchestrator:
         normalized return, as the paper's test-state curve in Fig. 5."""
         traj = rollout_lib.rollout(
             params, self.pcfg, self.env, self.test_state(),
-            jax.random.PRNGKey(0), deterministic=True,
+            jax.random.PRNGKey(0), deterministic=True, policy=self.policy,
         )
         return rollout_lib.normalized_return(traj)[0]

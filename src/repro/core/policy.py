@@ -38,6 +38,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -185,3 +187,51 @@ def sample_action(key: jax.Array, params: dict, cfg: PolicyConfig,
 
 def param_count(params: dict) -> int:
     return nn.param_count(params["actor"]) + 1  # actor + log_std (Table 2 scope)
+
+
+class PolicyFns(NamedTuple):
+    """The pure-callable policy interface the training stack consumes.
+
+    `core/rollout.py` and `core/ppo.py` only ever need these four programs;
+    bundling them decouples the stack from THIS module's Conv-trunk
+    parameterization, so alternative policies (e.g. the multi-scenario
+    shared-trunk heads in `fleet/multitask.py`) plug into the unchanged
+    rollout scan and PPO update.  Every callable is a pure function of its
+    array arguments with the configuration closed over statically.
+    """
+
+    sample: Callable[[jax.Array, dict, jax.Array],
+                     tuple[jax.Array, jax.Array]]  # (key, params, obs)
+    mean: Callable[[dict, jax.Array], jax.Array]                 # (params, obs)
+    dist: Callable[[dict, jax.Array], tuple[jax.Array, jax.Array]]
+    value: Callable[[dict, jax.Array], jax.Array]
+
+
+def policy_fns(cfg: PolicyConfig) -> PolicyFns:
+    """The default single-scenario policy bound to `cfg` — calling through
+    this adapter is call-for-call identical to the direct module functions
+    (the pre-adapter graph, pinned by tests/test_fleet.py)."""
+    return PolicyFns(
+        sample=partial(_sample_cfg, cfg),
+        mean=partial(_mean_cfg, cfg),
+        dist=partial(_dist_cfg, cfg),
+        value=partial(_value_cfg, cfg),
+    )
+
+
+# Module-level partials (not lambdas) keep PolicyFns values comparable and
+# picklable; each simply re-orders (cfg, ...) into the public signatures.
+def _sample_cfg(cfg, key, params, obs):
+    return sample_action(key, params, cfg, obs)
+
+
+def _mean_cfg(cfg, params, obs):
+    return actor_mean(params, cfg, obs)
+
+
+def _dist_cfg(cfg, params, obs):
+    return distribution(params, cfg, obs)
+
+
+def _value_cfg(cfg, params, obs):
+    return value(params, cfg, obs)

@@ -77,24 +77,50 @@ def gae(traj: Trajectory, gamma: float, lam: float) -> tuple[jax.Array, jax.Arra
     return advs, returns
 
 
+def flatten_batch(traj: Trajectory, advantages: jax.Array,
+                  returns: jax.Array, *, normalize: bool
+                  ) -> tuple[jax.Array, ...]:
+    """Flatten a time-major batch to the (T*B) minibatch tensors
+    (obs, actions, log_probs, advantages, returns), optionally normalizing
+    the advantages — shared by the single-scenario epoch below and the
+    fleet's per-scenario joint update (fleet/multitask.py), so PPO
+    preprocessing has one source of truth."""
+    flat = jax.tree.map(
+        lambda x: x.reshape((-1,) + x.shape[2:]),
+        (traj.obs, traj.actions, traj.log_probs, advantages, returns),
+    )
+    obs_f, act_f, lp_f, adv_f, ret_f = flat
+    if normalize:
+        adv_f = (adv_f - jnp.mean(adv_f)) / (jnp.std(adv_f) + 1e-8)
+    return obs_f, act_f, lp_f, adv_f, ret_f
+
+
 def ppo_loss(
     params: dict,
     cfg: PPOConfig,
-    pcfg: policy_lib.PolicyConfig,
+    pcfg: policy_lib.PolicyConfig | None,
     obs: jax.Array,
     actions: jax.Array,
     old_log_probs: jax.Array,
     advantages: jax.Array,
     returns: jax.Array,
+    *,
+    policy: policy_lib.PolicyFns | None = None,
 ) -> tuple[jax.Array, dict]:
-    """Clipped surrogate + value loss + entropy bonus on a flat minibatch."""
-    mean, std = policy_lib.distribution(params, pcfg, obs)
+    """Clipped surrogate + value loss + entropy bonus on a flat minibatch.
+
+    `policy` optionally substitutes the policy callable bundle (the
+    multi-scenario heads); left None it is bound from `pcfg`, which keeps
+    the loss graph bit-identical to the pre-adapter path.
+    """
+    pol = policy if policy is not None else policy_lib.policy_fns(pcfg)
+    mean, std = pol.dist(params, obs)
     new_log_probs = policy_lib.log_prob(mean, std, actions)
     ratio = jnp.exp(new_log_probs - old_log_probs)
     clipped = jnp.clip(ratio, 1.0 - cfg.clip, 1.0 + cfg.clip)
     surrogate = -jnp.mean(jnp.minimum(ratio * advantages, clipped * advantages))
 
-    values = policy_lib.value(params, pcfg, obs)
+    values = pol.value(params, obs)
     value_loss = 0.5 * jnp.mean((values - returns) ** 2)
 
     ent = jnp.mean(policy_lib.entropy(std))
@@ -114,10 +140,12 @@ def update_epoch(
     params: dict,
     opt_state: optim.adam.AdamState,
     cfg: PPOConfig,
-    pcfg: policy_lib.PolicyConfig,
+    pcfg: policy_lib.PolicyConfig | None,
     traj: Trajectory,
     advantages: jax.Array,
     returns: jax.Array,
+    *,
+    policy: policy_lib.PolicyFns | None = None,
 ) -> tuple[dict, optim.adam.AdamState, dict]:
     """One full-batch gradient step over the flattened (T*B) experience.
 
@@ -125,16 +153,11 @@ def update_epoch(
     (T*B) token axis is data-sharded; the psum of the gradient happens inside
     pjit via the sharded mean.
     """
-    flat = jax.tree.map(
-        lambda x: x.reshape((-1,) + x.shape[2:]),
-        (traj.obs, traj.actions, traj.log_probs, advantages, returns),
-    )
-    obs_f, act_f, lp_f, adv_f, ret_f = flat
-    if cfg.normalize_advantages:
-        adv_f = (adv_f - jnp.mean(adv_f)) / (jnp.std(adv_f) + 1e-8)
+    obs_f, act_f, lp_f, adv_f, ret_f = flatten_batch(
+        traj, advantages, returns, normalize=cfg.normalize_advantages)
 
     (_, stats), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
-        params, cfg, pcfg, obs_f, act_f, lp_f, adv_f, ret_f
+        params, cfg, pcfg, obs_f, act_f, lp_f, adv_f, ret_f, policy=policy
     )
     params, opt_state = optim.adam_update(cfg.adam, params, grads, opt_state)
     stats["grad_norm"] = optim.global_norm(grads)
@@ -145,8 +168,10 @@ def update(
     params: dict,
     opt_state: optim.adam.AdamState,
     cfg: PPOConfig,
-    pcfg: policy_lib.PolicyConfig,
+    pcfg: policy_lib.PolicyConfig | None,
     traj: Trajectory,
+    *,
+    policy: policy_lib.PolicyFns | None = None,
 ) -> tuple[dict, optim.adam.AdamState, dict]:
     """Full PPO update: GAE once, then n_epochs gradient steps (lax.scan)."""
     advantages, returns = gae(traj, cfg.gamma, cfg.lam)
@@ -154,7 +179,8 @@ def update(
     def epoch(carry, _):
         params, opt_state = carry
         params, opt_state, stats = update_epoch(
-            params, opt_state, cfg, pcfg, traj, advantages, returns
+            params, opt_state, cfg, pcfg, traj, advantages, returns,
+            policy=policy
         )
         return (params, opt_state), stats
 

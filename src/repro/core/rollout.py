@@ -26,18 +26,25 @@ from .ppo import Trajectory
 
 def rollout(
     params: dict,
-    pcfg: policy_lib.PolicyConfig,
+    pcfg: policy_lib.PolicyConfig | None,
     env: Env,
     u0: jax.Array,
     key: jax.Array,
     *,
     deterministic: bool = False,
+    policy: policy_lib.PolicyFns | None = None,
 ) -> Trajectory:
     """Roll a batch of environments for one full episode (T = env.n_actions).
 
     u0: (B, *state_shape) initial solver states (bank rows).
     Returns a time-major Trajectory (T, B, ...).
+
+    `policy` optionally substitutes the whole policy callable bundle
+    (e.g. a multi-scenario head from `fleet/multitask.py`); left None, the
+    default single-scenario policy is bound from `pcfg` and the scan is
+    bit-identical to the pre-adapter path.
     """
+    pol = policy if policy is not None else policy_lib.policy_fns(pcfg)
     n_steps = env.n_actions
     batch = u0.shape[0]
     state0 = EnvState(u=u0, t_step=jnp.zeros((batch,), jnp.int32))
@@ -46,12 +53,12 @@ def rollout(
     def step_fn(state: EnvState, key_t: jax.Array):
         obs = env.observe(state)
         if deterministic:
-            action = policy_lib.actor_mean(params, pcfg, obs)
-            mean, std = policy_lib.distribution(params, pcfg, obs)
+            action = pol.mean(params, obs)
+            mean, std = pol.dist(params, obs)
             logp = policy_lib.log_prob(mean, std, action)
         else:
-            action, logp = policy_lib.sample_action(key_t, params, pcfg, obs)
-        val = policy_lib.value(params, pcfg, obs)
+            action, logp = pol.sample(key_t, params, obs)
+        val = pol.value(params, obs)
         res = env.step(state, action)
         out = (obs, action, logp, res.reward, res.done, val)
         return res.state, out
@@ -60,7 +67,7 @@ def rollout(
         step_fn, state0, step_keys
     )
     last_obs = env.observe(final_state)
-    last_value = policy_lib.value(params, pcfg, last_obs)
+    last_value = pol.value(params, last_obs)
     return Trajectory(
         obs=obs,
         actions=actions,

@@ -50,46 +50,46 @@ class RunnerConfig:
     async_checkpoint: bool = True
 
 
-class Runner:
-    def __init__(
-        self,
-        env: Env,
-        fleet: FleetConfig,
-        ppo_cfg: ppo_lib.PPOConfig | None = None,
-        run_cfg: RunnerConfig | None = None,
-        *,
-        mesh=None,
-        failure_injector: Callable[[int], None] | None = None,
-    ):
-        self.run_cfg = run_cfg or RunnerConfig()
-        self.ppo_cfg = ppo_cfg or ppo_lib.PPOConfig()
-        self.orch = Orchestrator(env, fleet, mesh=mesh, seed=self.run_cfg.seed)
-        self.failure_injector = failure_injector
-        self._ckpt_thread: threading.Thread | None = None
+class RunnerBase:
+    """Checkpoint + metrics plumbing shared by training loops.
 
-        key = jax.random.PRNGKey(self.run_cfg.seed)
-        self.seed_key, init_key = jax.random.split(key)
-        self.params = policy_lib.init(init_key, self.orch.pcfg)
-        self.opt_state = optim.adam_init(self.params)
+    The single-scenario `Runner` below and the multi-scenario fleet runner
+    (`fleet/pipeline.py`) carry different state trees (one policy vs. the
+    multitask tree + broker rings) but share the same durability contract:
+    atomic versioned checkpoints written off the critical path by a
+    background thread, template-based restore, and a jsonl metrics stream.
+    Subclasses define `_state_tree` / `_load_state` / `_checkpoint_meta`.
+    """
+
+    run_cfg: RunnerConfig
+
+    def __init__(self, run_cfg: RunnerConfig | None):
+        self.run_cfg = run_cfg or RunnerConfig()
         self.iteration = 0
+        self._ckpt_thread: threading.Thread | None = None
         self.metrics_path = self.run_cfg.metrics_path or os.path.join(
             self.run_cfg.checkpoint_dir, "metrics.jsonl")
 
-        self._update = jax.jit(
-            lambda p, o, t: ppo_lib.update(p, o, self.ppo_cfg, self.orch.pcfg, t)
-        )
+    # --- subclass hooks -------------------------------------------------------
+    def _state_tree(self) -> dict:
+        """The checkpointed device state (template for restore)."""
+        raise NotImplementedError
+
+    def _load_state(self, tree: dict, manifest: dict) -> None:
+        """Install a restored state tree + manifest onto self."""
+        raise NotImplementedError
+
+    def _checkpoint_meta(self) -> dict:
+        return {"iteration": self.iteration, "seed": self.run_cfg.seed}
 
     # --- checkpoint plumbing --------------------------------------------------
-    def _state_tree(self) -> dict:
-        return {"params": self.params, "opt": self.opt_state}
-
     def save_checkpoint(self, block: bool = False) -> None:
         tree = jax.device_get(self._state_tree())  # host copy off critical path
-        meta = {"iteration": self.iteration, "seed": self.run_cfg.seed,
-                "n_envs": self.orch.fleet.n_envs}
+        meta = self._checkpoint_meta()
+        step = self.iteration
 
         def write():
-            checkpoints.save(self.run_cfg.checkpoint_dir, self.iteration, tree,
+            checkpoints.save(self.run_cfg.checkpoint_dir, step, tree,
                              meta=meta, keep=self.run_cfg.keep_checkpoints)
 
         self.join_pending_checkpoint()  # never two concurrent writers
@@ -111,8 +111,7 @@ class Runner:
             return False
         tree, manifest = checkpoints.restore(
             self.run_cfg.checkpoint_dir, step, self._state_tree())
-        self.params, self.opt_state = tree["params"], tree["opt"]
-        self.iteration = int(manifest["meta"]["iteration"])
+        self._load_state(tree, manifest)
         return True
 
     # --- metrics ---------------------------------------------------------------
@@ -120,6 +119,43 @@ class Runner:
         os.makedirs(os.path.dirname(self.metrics_path) or ".", exist_ok=True)
         with open(self.metrics_path, "a") as f:
             f.write(json.dumps(record) + "\n")
+
+
+class Runner(RunnerBase):
+    def __init__(
+        self,
+        env: Env,
+        fleet: FleetConfig,
+        ppo_cfg: ppo_lib.PPOConfig | None = None,
+        run_cfg: RunnerConfig | None = None,
+        *,
+        mesh=None,
+        failure_injector: Callable[[int], None] | None = None,
+    ):
+        super().__init__(run_cfg)
+        self.ppo_cfg = ppo_cfg or ppo_lib.PPOConfig()
+        self.orch = Orchestrator(env, fleet, mesh=mesh, seed=self.run_cfg.seed)
+        self.failure_injector = failure_injector
+
+        key = jax.random.PRNGKey(self.run_cfg.seed)
+        self.seed_key, init_key = jax.random.split(key)
+        self.params = policy_lib.init(init_key, self.orch.pcfg)
+        self.opt_state = optim.adam_init(self.params)
+
+        self._update = jax.jit(
+            lambda p, o, t: ppo_lib.update(p, o, self.ppo_cfg, self.orch.pcfg, t)
+        )
+
+    # --- checkpoint hooks -----------------------------------------------------
+    def _state_tree(self) -> dict:
+        return {"params": self.params, "opt": self.opt_state}
+
+    def _load_state(self, tree: dict, manifest: dict) -> None:
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.iteration = int(manifest["meta"]["iteration"])
+
+    def _checkpoint_meta(self) -> dict:
+        return {**super()._checkpoint_meta(), "n_envs": self.orch.fleet.n_envs}
 
     # --- training ---------------------------------------------------------------
     def run_iteration(self, k: int) -> dict:

@@ -13,7 +13,12 @@ Obs    : the two layers of wall-adjacent elements.  Channels are declared
            * `channel_wm_p` (obs_pressure=True): the same three plus
              'p_wall', the near-wall static-pressure fluctuation p - p0
              normalized by the wall shear stress rho u_tau^2 —
-             (2*Kx*Kz, n, n, n, 4).
+             (2*Kx*Kz, n, n, n, 4);
+           * `channel_wm_t` (obs_temperature=True): the same three plus
+             'T_wall', the near-wall temperature fluctuation T - T0
+             normalized by the friction-temperature scale u_tau^2/cp;
+           * `channel_wm_hre`: the base observation at a higher-Re_tau
+             configuration (Re_tau ~ 90, scaled Reichardt parameters).
          Top-wall elements are mirrored (y node axis flipped, v_y negated)
          so both walls present the same orientation to the shared policy
          trunk — "away from the wall" is always increasing node index.
@@ -47,10 +52,18 @@ class ChannelEnv:
     analog of HydroGym/drlfoam-style multi-field probes).  Its declared
     policy-input gain of 0.5 re-balances the channel against the O(1)
     velocities (p'_rms ~ 2-3 tau_w in channel flow).
+
+    With `obs_temperature=True` the observation instead/additionally gains
+    the near-wall temperature fluctuation T - T0 normalized by the
+    friction-temperature scale u_tau^2/cp (`ChannelConfig.t_tau`) — the
+    thermal sibling of the pressure channel (ROADMAP follow-on from the
+    named-channel refactor).  Channel order is always
+    velocities [, p_wall][, T_wall].
     """
 
     cfg: ChannelConfig
     obs_pressure: bool = False
+    obs_temperature: bool = False
 
     @property
     def obs_spec(self) -> ObsSpec:
@@ -58,6 +71,9 @@ class ChannelEnv:
         chans = velocity_channels(3, self.cfg.u_bulk)
         if self.obs_pressure:
             chans = chans + (ChannelSpec("p_wall", scale=self.cfg.tau_wall,
+                                         gain=0.5),)
+        if self.obs_temperature:
+            chans = chans + (ChannelSpec("T_wall", scale=self.cfg.t_tau,
                                          gain=0.5),)
         return ObsSpec(n_elements=self.cfg.n_wall_elements,
                        spatial=(n, n, n), channel_specs=chans)
@@ -94,6 +110,9 @@ class ChannelEnv:
         if self.obs_pressure:
             p = channel.wall_pressure_observation(state.u, self.cfg)
             obs = jnp.concatenate([obs, p / self.cfg.tau_wall], axis=-1)
+        if self.obs_temperature:
+            t = channel.wall_temperature_observation(state.u, self.cfg)
+            obs = jnp.concatenate([obs, t / self.cfg.t_tau], axis=-1)
         return obs
 
     def _split_action(self, action: jax.Array
@@ -157,3 +176,42 @@ def _channel_wm_p_reduced(**overrides) -> ChannelEnv:
     defaults = dict(n_elem=(2, 3, 2), t_end=0.3, dt_rl=0.1)
     defaults.update(overrides)
     return ChannelEnv(cfg=ChannelConfig(**defaults), obs_pressure=True)
+
+
+# Higher-Re_tau configuration: lower viscosity + higher target friction
+# velocity push the matching point deep into the log layer (Re_tau =
+# u_tau h / nu: 90 vs. the base 24), so the Reichardt inversion works at
+# larger y+ — the fixed-point budget is scaled up with it (the "scaled
+# Reichardt parameters" of the config family), and the initial
+# perturbation amplitude rises to trip the stiffer profile.
+_HRE = dict(nu=2e-3, u_tau=0.18, wm_iters=12, perturb=0.1)
+
+
+@register("channel_wm_hre")
+def _channel_wm_hre(**overrides) -> ChannelEnv:
+    """Higher-Re_tau variant of `channel_wm` (Re_tau ~ 90)."""
+    defaults = dict(_HRE)
+    defaults.update(overrides)
+    return ChannelEnv(cfg=ChannelConfig(**defaults))
+
+
+@register("channel_wm_hre_reduced")
+def _channel_wm_hre_reduced(**overrides) -> ChannelEnv:
+    """CPU-friendly smoke scale of the higher-Re_tau variant."""
+    defaults = dict(_HRE, n_elem=(2, 3, 2), t_end=0.3, dt_rl=0.1)
+    defaults.update(overrides)
+    return ChannelEnv(cfg=ChannelConfig(**defaults))
+
+
+@register("channel_wm_t")
+def _channel_wm_t(**overrides) -> ChannelEnv:
+    """4-channel variant: velocity + near-wall temperature observations."""
+    return ChannelEnv(cfg=ChannelConfig(**overrides), obs_temperature=True)
+
+
+@register("channel_wm_t_reduced")
+def _channel_wm_t_reduced(**overrides) -> ChannelEnv:
+    """CPU-friendly smoke scale of the temperature variant."""
+    defaults = dict(n_elem=(2, 3, 2), t_end=0.3, dt_rl=0.1)
+    defaults.update(overrides)
+    return ChannelEnv(cfg=ChannelConfig(**defaults), obs_temperature=True)

@@ -1,0 +1,41 @@
+"""Multi-scenario fleet subsystem: heterogeneous sub-fleets on one mesh.
+
+    from repro import envs, fleet
+
+    runner = fleet.make_fleet_runner(
+        ("hit_les_reduced", "channel_wm_reduced", "burgers_reduced"),
+        total_envs=6)
+    history = runner.train(5)
+
+Four pieces (see docs/multi_scenario_training.md for how they compose):
+
+  broker      device-resident per-scenario trajectory/metric ring buffers
+              (the SmartSim/KeyDB experience broker taken fully on-device)
+  scheduler   cost-weighted partition of the mesh batch axis into
+              per-scenario sub-fleets + the fleet's PRNG/bank bookkeeping
+  multitask   shared-trunk policy with per-scenario adapters and heads,
+              built from each env's declared ObsSpec/ActionSpec
+  pipeline    double-buffered rollout/update overlap (FleetRunner), with
+              the core Runner's checkpoint/restore durability contract
+"""
+from . import broker, multitask, pipeline, scheduler
+from .multitask import MultiTaskConfig, fleet_update
+from .pipeline import FleetOrchestrator, FleetRunner, FleetRunnerConfig, \
+    make_fleet_runner
+from .scheduler import FleetSchedule, SubFleet, build_schedule
+
+__all__ = [
+    "FleetOrchestrator",
+    "FleetRunner",
+    "FleetRunnerConfig",
+    "FleetSchedule",
+    "MultiTaskConfig",
+    "SubFleet",
+    "broker",
+    "build_schedule",
+    "fleet_update",
+    "make_fleet_runner",
+    "multitask",
+    "pipeline",
+    "scheduler",
+]

@@ -1,0 +1,151 @@
+"""Device-resident experience broker — the SmartSim/KeyDB analog on-device.
+
+The paper stages every state/action/trajectory exchange through an
+in-memory KeyDB database: FLEXI instances PUT trajectories, the TF-Agents
+driver GETs them, and the broker decouples the producers from the consumer.
+This module is that broker taken to its endpoint on an accelerator mesh:
+per-scenario ring buffers of whole `Trajectory` pytrees living in device
+memory, written and read by jitted programs.  Three things fall out:
+
+  * decoupling — rollout (producer) and PPO update (consumer) communicate
+    only through ring slots, so `fleet/pipeline.py` can dispatch the
+    iteration-(k+1) rollout while the iteration-k update still runs
+    (capacity 2 == classic double buffering; the writer and reader slots
+    never alias),
+  * off-critical-path metrics — per-iteration scalar stats are pushed into
+    a small metrics ring instead of `device_get` every iteration; the host
+    drains the ring at checkpoint boundaries (`drain_host`), so the hot
+    loop never blocks on a host round-trip,
+  * durability — a ring is a plain pytree of arrays plus an int32 write
+    head, so the whole broker drops into the checkpoint state tree and the
+    in-flight trajectory survives restart bit-exactly (the fleet's
+    deterministic-replay contract, pinned by tests/test_fleet.py).
+
+Everything here is functional: `push` returns a NEW ring (donate the old
+one at the jit boundary for in-place updates — see `make_push`).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RingBuffer(NamedTuple):
+    """A fixed-capacity ring of pytree items, device-resident.
+
+    `data` holds the items stacked on a leading slot axis of length
+    `capacity`; `head` counts TOTAL pushes (monotonic int32) — the write
+    slot is `head % capacity`, and `head` doubles as the logical clock that
+    makes resume deterministic.
+    """
+
+    data: Any          # pytree; every leaf (capacity, *item_shape)
+    head: jax.Array    # () int32, number of pushes so far
+
+
+def capacity(ring: RingBuffer) -> int:
+    return jax.tree.leaves(ring.data)[0].shape[0]
+
+
+def size(ring: RingBuffer) -> jax.Array:
+    """Number of valid items currently held (<= capacity)."""
+    return jnp.minimum(ring.head, capacity(ring))
+
+
+def ring_init(template: Any, cap: int) -> RingBuffer:
+    """An empty ring whose slots have the shapes/dtypes of `template`
+    (an example item — e.g. one `Trajectory` from `jax.eval_shape`)."""
+    data = jax.tree.map(
+        lambda x: jnp.zeros((cap,) + tuple(x.shape), x.dtype), template)
+    return RingBuffer(data=data, head=jnp.zeros((), jnp.int32))
+
+
+def push(ring: RingBuffer, item: Any) -> RingBuffer:
+    """Write `item` at the head slot; returns the advanced ring."""
+    cap = capacity(ring)
+    slot = ring.head % cap
+    data = jax.tree.map(
+        lambda buf, x: jax.lax.dynamic_update_index_in_dim(
+            buf, x.astype(buf.dtype), slot, 0),
+        ring.data, item)
+    return RingBuffer(data=data, head=ring.head + 1)
+
+
+def peek(ring: RingBuffer, age: int = 0) -> Any:
+    """The item pushed `age` slots ago (0 = newest).  Reading an empty ring
+    returns the zero template (callers gate on `size`)."""
+    cap = capacity(ring)
+    slot = (ring.head - 1 - age) % cap
+    return jax.tree.map(
+        lambda buf: jax.lax.dynamic_index_in_dim(buf, slot, 0,
+                                                 keepdims=False),
+        ring.data)
+
+
+# Jitted, donating push: the old ring's buffers are donated, so XLA updates
+# the slot in place instead of copying `capacity` trajectories per push (one
+# compiled instance per ring shape, cached by jit as usual).
+push_donated = jax.jit(push, donate_argnums=(0,))
+
+
+class Broker(NamedTuple):
+    """Per-scenario trajectory rings + per-scenario metrics rings.
+
+    A plain pytree (dict values are RingBuffers) — it drops into the
+    checkpoint state tree unchanged and `jax.device_get` round-trips it.
+    """
+
+    traj: dict[str, RingBuffer]
+    metrics: dict[str, RingBuffer]
+
+
+def broker_init(traj_templates: dict[str, Any], *, traj_capacity: int = 2,
+                metric_templates: dict[str, Any] | None = None,
+                metrics_capacity: int = 256) -> Broker:
+    """Build the broker from per-scenario example items.
+
+    traj_capacity=2 is the double-buffering minimum the pipeline needs;
+    larger values keep a short experience history (e.g. for off-policy
+    diagnostics) at the price of device memory.
+    """
+    traj = {name: ring_init(t, traj_capacity)
+            for name, t in traj_templates.items()}
+    metrics = {name: ring_init(t, metrics_capacity)
+               for name, t in (metric_templates or {}).items()}
+    return Broker(traj=traj, metrics=metrics)
+
+
+def push_traj(broker: Broker, name: str, item: Any) -> Broker:
+    return broker._replace(traj={**broker.traj,
+                                 name: push(broker.traj[name], item)})
+
+
+def push_metrics(broker: Broker, name: str, item: Any) -> Broker:
+    return broker._replace(metrics={**broker.metrics,
+                                    name: push(broker.metrics[name], item)})
+
+
+def latest_traj(broker: Broker, name: str) -> Any:
+    return peek(broker.traj[name])
+
+
+def drain_host(broker: Broker) -> dict[str, list[dict]]:
+    """Host-side read of every metrics ring, oldest first — the ONLY place
+    the broker touches the host.  Called at checkpoint boundaries / end of
+    training, never inside the iteration hot loop."""
+    out: dict[str, list[dict]] = {}
+    for name, ring in broker.metrics.items():
+        n = int(jax.device_get(size(ring)))
+        head = int(jax.device_get(ring.head))
+        cap = capacity(ring)
+        data = jax.device_get(ring.data)
+        records = []
+        for i in range(n):
+            slot = (head - n + i) % cap
+            records.append(jax.tree.map(lambda buf: buf[slot].item()
+                                        if buf[slot].ndim == 0 else buf[slot],
+                                        data))
+        out[name] = records
+    return out

@@ -1,1 +1,11 @@
 """Launch layer: production mesh, AOT dry-run, training/serving drivers."""
+import os
+
+# Where the AOT dry-run writes its per-cell JSON artifacts (and where the
+# fleet scheduler reads measured step costs back).  Defined here rather
+# than in dryrun.py because importing dryrun has an intentional side
+# effect — forcing the host platform device count before jax initializes —
+# that mere readers of the path must not trigger.
+DRYRUN_ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..",
+    "benchmarks", "artifacts", "dryrun")

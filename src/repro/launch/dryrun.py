@@ -34,10 +34,8 @@ import jax
 from .. import configs
 from ..configs.shapes import SHAPES
 from ..models import lm as lm_mod
+from . import DRYRUN_ARTIFACT_DIR as ARTIFACT_DIR
 from . import hlo_analysis, mesh as mesh_lib, specs
-
-ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                            "benchmarks", "artifacts", "dryrun")
 
 
 def _memory_analysis(compiled) -> dict:
@@ -225,6 +223,47 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return record
 
 
+def _fleet_cell_costs(compiled, c1, c2, K: int, n_chips: int,
+                      n_envs: int) -> dict:
+    """Shared cost extraction for the RL fleet cells (HIT and channel):
+    substep-scan calibration from the 1- and 2-substep compiles
+    (cost_analysis counts while bodies once), memory/roofline terms, and
+    the per-env step cost (`flops_per_env`) the fleet scheduler consumes
+    as its sub-fleet weight (fleet/scheduler.dryrun_step_cost)."""
+    def costs(comp):
+        cost = _cost_analysis(comp)
+        coll = hlo_analysis.collective_bytes(comp.as_text())
+        return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+                float(coll.total_bytes), coll.bytes_by_kind)
+
+    f1, b1, l1, k1 = costs(c1)
+    f2, b2, l2, k2 = costs(c2)
+    flops = f1 + (K - 1) * (f2 - f1)
+    hbm = b1 + (K - 1) * (b2 - b1)
+    coll = l1 + (K - 1) * (l2 - l1)
+    mem = _memory_analysis(compiled)
+    fused = None
+    if "temp_size_in_bytes" in mem:
+        fused = (mem.get("argument_size_in_bytes", 0)
+                 + mem.get("output_size_in_bytes", 0)
+                 + 2 * mem["temp_size_in_bytes"])
+    terms = hlo_analysis.roofline_terms(
+        flops, hbm, coll, n_chips, mesh_lib.PEAK_FLOPS_BF16,
+        mesh_lib.HBM_BW, mesh_lib.ICI_BW, fused_bytes_per_dev=fused)
+    return {
+        "n_substeps": K,
+        "n_envs": n_envs,
+        "memory_analysis": mem,
+        "flops_per_dev": flops,
+        "flops_per_env": flops * n_chips / n_envs,
+        "hbm_bytes_per_dev": hbm,
+        "collective_total_per_dev": coll,
+        "collective_bytes_per_dev": {
+            key: k1[key] + (K - 1) * (k2[key] - k1[key]) for key in k1},
+        "roofline": terms,
+    }
+
+
 def run_relexi_cell(dof: int = 24, n_envs: int = 256, multi_pod: bool = False,
                     *, elem_axis: str | None = "model", tag: str = "",
                     save: bool = True) -> dict:
@@ -301,47 +340,95 @@ def run_relexi_cell(dof: int = 24, n_envs: int = 256, multi_pod: bool = False,
         t0 = time.perf_counter()
         compiled = lower_for(env_cfg)
         t_compile = time.perf_counter() - t0
-        K = env_cfg.n_substeps
         # calibration: 1 and 2 substeps (dt_rl = dt, 2*dt)
         c1 = lower_for(dataclasses.replace(env_cfg, dt_rl=env_cfg.dt * 1.0))
         c2 = lower_for(dataclasses.replace(env_cfg, dt_rl=env_cfg.dt * 2.0))
-
-        def costs(comp):
-            cost = _cost_analysis(comp)
-            coll = hlo_analysis.collective_bytes(comp.as_text())
-            return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
-                    float(coll.total_bytes), coll.bytes_by_kind)
-
-        f1, b1, l1, k1 = costs(c1)
-        f2, b2, l2, k2 = costs(c2)
-        flops = f1 + (K - 1) * (f2 - f1)
-        hbm = b1 + (K - 1) * (b2 - b1)
-        coll = l1 + (K - 1) * (l2 - l1)
-        mem = _memory_analysis(compiled)
-        fused = None
-        if "temp_size_in_bytes" in mem:
-            fused = (mem.get("argument_size_in_bytes", 0)
-                     + mem.get("output_size_in_bytes", 0)
-                     + 2 * mem["temp_size_in_bytes"])
-        terms = hlo_analysis.roofline_terms(
-            flops, hbm, coll, n_chips, mesh_lib.PEAK_FLOPS_BF16,
-            mesh_lib.HBM_BW, mesh_lib.ICI_BW, fused_bytes_per_dev=fused)
-        record.update({
-            "t_compile_s": round(t_compile, 2),
-            "n_substeps": K,
-            "memory_analysis": mem,
-            "flops_per_dev": flops,
-            "hbm_bytes_per_dev": hbm,
-            "collective_total_per_dev": coll,
-            "collective_bytes_per_dev": {
-                key: k1[key] + (K - 1) * (k2[key] - k1[key]) for key in k1},
-            "roofline": terms,
-        })
+        record["t_compile_s"] = round(t_compile, 2)
+        record.update(_fleet_cell_costs(compiled, c1, c2,
+                                        env_cfg.n_substeps, n_chips, n_envs))
     except Exception as e:
         record.update(status="fail", error=f"{type(e).__name__}: {e}",
                       traceback=traceback.format_exc()[-2000:])
     if save:
         record["shape"] += f"_{'elem' + str(16) if elem_axis else 'noelem'}"
+        _save(record, tag)
+    return record
+
+
+def run_channel_cell(n_envs: int = 256, multi_pod: bool = False, *,
+                     variant: str = "channel_wm", tag: str = "",
+                     save: bool = True) -> dict:
+    """The channel-WMLES fleet cell: one synchronous MDP step (policy eval +
+    Delta t_RL wall-modeled solver advance + profile reward) on the
+    production mesh — `run_relexi_cell`'s sibling for the channel scenario,
+    so its sharding can be sized the same way.
+
+    The channel's element grid is anisotropic (Kx != Ky != Kz) and small
+    (3x4x3 by default), so environments shard over ALL mesh axes
+    ((pod, data, model)) rather than splitting element space; the substep
+    scan is calibrated at 1 and 2 substeps exactly like the HIT cell.
+
+    The artifact carries `flops_per_env` — the per-environment step cost
+    the fleet scheduler consumes as its sub-fleet weight
+    (`fleet/scheduler.dryrun_step_cost`).
+    """
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from .. import envs as envs_mod
+    from ..core import policy as policy_lib
+    from ..envs.base import EnvState
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    mesh_name = "multi" if multi_pod else "single"
+    record = {"arch": "channel-wm", "shape": f"fleet_{n_envs}",
+              "mesh": mesh_name, "kind": "rl_step", "status": "ok",
+              "variant": variant, "n_envs": n_envs}
+
+    def lower_for(env):
+        cfg = env.cfg
+        pcfg = policy_lib.PolicyConfig.from_specs(env.obs_spec,
+                                                  env.action_spec)
+
+        def mdp(params, u):
+            state = EnvState(u=u, t_step=jnp.zeros((n_envs,), jnp.int32))
+            action = policy_lib.actor_mean(params, pcfg, env.observe(state))
+            res = env.step(state, action)
+            return res.state.u, res.reward
+
+        env_axes = ("pod", "data", "model") if multi_pod else ("data",
+                                                               "model")
+        u_spec = P(env_axes, *([None] * 7))
+        with mesh:
+            abstract_params = jax.eval_shape(
+                lambda: policy_lib.init(jax.random.PRNGKey(0), pcfg))
+            kx, ky, kz = cfg.n_elem
+            n = cfg.n
+            u_abs = jax.ShapeDtypeStruct(
+                (n_envs, kx, ky, kz, n, n, n, 5), jnp.float32)
+            rep = NamedSharding(mesh, P())
+            fn = jax.jit(mdp, in_shardings=(
+                jax.tree.map(lambda _: rep, abstract_params),
+                NamedSharding(mesh, u_spec)))
+            return fn.lower(abstract_params, u_abs).compile()
+
+    try:
+        env = envs_mod.make(variant)
+        cfg = env.cfg
+        t0 = time.perf_counter()
+        compiled = lower_for(env)
+        t_compile = time.perf_counter() - t0
+        # calibration: the same cell at 1 and 2 solver substeps
+        c1 = lower_for(envs_mod.make(variant, dt_rl=cfg.dt * 1.0))
+        c2 = lower_for(envs_mod.make(variant, dt_rl=cfg.dt * 2.0))
+        record["t_compile_s"] = round(t_compile, 2)
+        record.update(_fleet_cell_costs(compiled, c1, c2, cfg.n_substeps,
+                                        n_chips, n_envs))
+    except Exception as e:
+        record.update(status="fail", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    if save:
         _save(record, tag)
     return record
 
@@ -378,10 +465,29 @@ def main() -> None:
                          "the multi-pod proof run)")
     ap.add_argument("--relexi", action="store_true",
                     help="run the paper's HIT fleet cell instead of LM cells")
+    ap.add_argument("--channel", action="store_true",
+                    help="run the channel-WMLES fleet cell (sizes the "
+                         "channel sharding; feeds the fleet scheduler)")
+    ap.add_argument("--variant", default="channel_wm",
+                    help="registered channel scenario for --channel")
     ap.add_argument("--dof", type=int, default=24, choices=(24, 32))
     ap.add_argument("--n-envs", type=int, default=256)
     ap.add_argument("--no-elem-shard", action="store_true")
     args = ap.parse_args()
+
+    if args.channel:
+        for multi in {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]:
+            rec = run_channel_cell(args.n_envs, multi, variant=args.variant,
+                                   tag=args.tag)
+            status = rec["status"]
+            extra = (f"bound={rec['roofline']['bound']} "
+                     f"frac={rec['roofline']['roofline_fraction']:.2f} "
+                     f"flops/env={rec['flops_per_env']:.3g}"
+                     if status == "ok" else rec.get("error", ""))
+            print(f"[{rec['mesh']}] {rec['arch']:24s} {rec['shape']:12s} "
+                  f"{status.upper():5s} {extra}", flush=True)
+        return
 
     if args.relexi:
         for multi in {"single": [False], "multi": [True],
