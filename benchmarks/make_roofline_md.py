@@ -6,9 +6,10 @@ the §Perf header.
 """
 from __future__ import annotations
 
+import json
 import os
 
-from . import roofline
+from . import common, roofline
 
 MARKER = "<!-- ROOFLINE_TABLE -->"
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
@@ -56,8 +57,44 @@ def render(mesh: str = "single") -> str:
     return "\n".join(out)
 
 
+def render_rhs() -> str:
+    """Markdown table for the fused DGSEM-RHS arithmetic-intensity entry
+    (benchmarks/roofline.py rhs_kernel_entry -> roofline_rhs.json).
+    Returns "" when the artifact has not been produced yet."""
+    path = os.path.join(common.ARTIFACTS, "roofline_rhs.json")
+    if not os.path.exists(path):
+        return ""
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    out = [
+        "Fused DGSEM-RHS mega-kernel: XLA-counted flops per evaluation; "
+        "`ai_fused` assumes HBM traffic of state-in + cs-in + rhs-out only "
+        "(all intermediates in VMEM), vs XLA's bytes-accessed for the "
+        "unfused assembly.",
+        "",
+        "| case | flops | bytes_unfused | bytes_fused_ideal | ai_unfused | "
+        "ai_fused |",
+        "|---|---|---|---|---|---|",
+    ]
+    for e in entries:
+        out.append(
+            f"| {e['case']} | {e['flops']:.3e} | {e['bytes_unfused']:.3e} | "
+            f"{e['bytes_fused_ideal']:.3e} | "
+            f"{e['ai_unfused']:.1f} | {e['ai_fused']:.1f} |")
+    return "\n".join(out)
+
+
 def splice() -> None:
     table = render()
+    rhs_table = render_rhs()
+    if rhs_table:
+        table = table + "\n\n" + rhs_table
+    if not os.path.exists(EXPERIMENTS):
+        # nothing to splice into — print the rendered tables instead so the
+        # command is still useful in a fresh checkout
+        print(f"{EXPERIMENTS} not found; rendered tables:\n")
+        print(table)
+        return
     with open(EXPERIMENTS) as f:
         text = f.read()
     head, _, rest = text.partition(MARKER)

@@ -78,6 +78,98 @@ def run_wall_model(quick: bool = True) -> dict:
     return {"n_rows": len(results)}
 
 
+def run_rhs(quick: bool = True) -> dict:
+    """Fused-mega-kernel vs separate-ops vs pure-jnp timings for one full
+    Navier-Stokes RHS evaluation (the per-RK-substep unit of work):
+
+      * fused      one Pallas launch (kernels/rhs.py) — compiled on TPU,
+                   interpret mode elsewhere (still a single XLA dispatch);
+      * separate   the pre-fusion kernel composition: per-stage jitted
+                   dispatches with the gradients/nu_t stage running the
+                   separate dg_derivative3 + smagorinsky_nut Pallas
+                   launches (`solver.kernel_grad_nut`) — per-stage
+                   dispatch + HBM round-trips, what the mega-kernel
+                   removes;
+      * pure_jnp   the staged jnp assembly under one jit — XLA's own
+                   fusion, the single-dispatch non-Pallas baseline.
+
+    Writes perf_rhs.json with rows + fused_vs_separate_speedup.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cfd import initial, solver
+    from repro.cfd.solver import HITConfig
+    from repro.kernels import default_impl
+
+    backend = jax.default_backend()
+    common.row("# perf_rhs", "backend", "case", "impl", "median_s", "note")
+    cases = [("hit_reduced", HITConfig(n_poly=3, n_elem=2,
+                                       use_kernels=False))]
+    if not quick:
+        # the paper's 24-DOF-per-direction production HIT mesh
+        cases.append(("hit_24dof", HITConfig(n_poly=5, n_elem=4,
+                                             use_kernels=False)))
+    results, speedups = [], {}
+    for name, cfg in cases:
+        cfg_k = dataclasses.replace(cfg, use_kernels=True)
+        ops_d = cfg.operators()
+        u = initial.sample_initial_state(jax.random.PRNGKey(0), cfg)
+        cs = jnp.full(u.shape[:-1], 0.17, u.dtype)
+
+        fused_fn = jax.jit(
+            lambda u, cs: solver.navier_stokes_rhs(u, cs, cfg_k, ops_d))
+        pure_fn = jax.jit(
+            lambda u, cs: solver.navier_stokes_rhs(u, cs, cfg, ops_d))
+
+        # separate-ops: every stage its own jitted dispatch, gradients via
+        # the pre-fusion dg_derivative3 + smagorinsky Pallas composition —
+        # the execution shape `use_kernels=True` had before the mega-kernel
+        # (stage boundaries force results through HBM and pay per-launch
+        # overhead)
+        def _prim(u):
+            from repro.cfd import equations
+            rho, vel, p, temp = equations.conservative_to_primitive(u)
+            q_prim = jnp.concatenate([vel, temp[..., None]], axis=-1)
+            return rho, vel, p, u[..., 4] / rho, q_prim
+        prim_fn = jax.jit(_prim)
+        grad_fn = jax.jit(
+            lambda q, cs: solver.kernel_grad_nut(
+                q, cs, ops_d["D"], ops_d["inv_w_end"], cfg.delta_filter,
+                dg=cfg.dg))
+        div_fn = jax.jit(
+            lambda u, prim, gp, nt: solver.rhs_divergence(
+                u, prim, gp, nt, cfg, ops_d))
+        force_fn = jax.jit(lambda u, vel: solver.rhs_forcing(u, vel, cfg))
+        add_fn = jax.jit(lambda a, b: a + b)
+
+        def separate_fn(u, cs):
+            rho, vel, p, e_spec, q_prim = prim_fn(u)
+            grad_prim, nu_t = grad_fn(q_prim, cs)
+            rhs = div_fn(u, (rho, vel, p, e_spec), grad_prim, nu_t)
+            return add_fn(rhs, force_fn(u, vel))
+
+        timings = {}
+        for impl, fn in (("fused", fused_fn), ("separate", separate_fn),
+                         ("pure_jnp", pure_fn)):
+            t = common.timeit(fn, u, cs, warmup=5, iters=20)
+            timings[impl] = t
+            note = ("interpret-mode (oracle check, not perf)"
+                    if impl != "pure_jnp" and backend != "tpu" else "")
+            common.row("perf_rhs", backend, name, impl, f"{t:.6f}", note)
+            results.append({"backend": backend, "case": name, "impl": impl,
+                            "median_s": t})
+        speedups[name] = timings["separate"] / timings["fused"]
+        common.row("perf_rhs", backend, name, "fused_vs_separate",
+                   f"{speedups[name]:.2f}x", "")
+    common.save_json("perf_rhs.json",
+                     {"default_impl": default_impl(), "rows": results,
+                      "fused_vs_separate_speedup": speedups})
+    return {"n_rhs_rows": len(results)}
+
+
 def run(quick: bool = True) -> dict:
     common.row("# perf_compare", "arch", "shape", "variant",
                "collective_s", "compute_s", "memory_s", "frac", "note")
@@ -99,9 +191,28 @@ def run(quick: bool = True) -> dict:
         print("no tagged perf artifacts found; run the §Perf commands in "
               "EXPERIMENTS.md first")
     out = {"n_comparisons": n}
+    out.update(run_rhs(quick=quick))
     out.update(run_wall_model(quick=quick))
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--sections", default="",
+                        help="comma-separated subset to run "
+                             "(rhs,wall_model); default: everything")
+    parser.add_argument("--full", action="store_true",
+                        help="full shape sweep instead of quick smoke sizes")
+    cli = parser.parse_args()
+    quick = not cli.full
+    sections = [s for s in cli.sections.split(",") if s]
+    if not sections:
+        run(quick=quick)
+    else:
+        for section in sections:
+            fn = {"rhs": run_rhs, "wall_model": run_wall_model}.get(section)
+            if fn is None:
+                parser.error(f"unknown section {section!r}")
+            fn(quick=quick)

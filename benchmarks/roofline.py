@@ -52,11 +52,67 @@ def print_table(mesh: str = "single", tag: str = "") -> list[dict]:
     return rows
 
 
+def rhs_kernel_entry(quick: bool = True) -> dict:
+    """Arithmetic-intensity entry for the fused DGSEM-RHS mega-kernel.
+
+    Compiles the pure-jnp reference RHS and reads XLA's own cost analysis
+    (flops, bytes accessed) through the `cost_analysis_dict` shim, then
+    contrasts the unfused arithmetic intensity with the fused ideal — the
+    mega-kernel touches HBM only for the state in, cs field in and RHS out
+    (every intermediate lives in VMEM), so its AI is flops over that
+    minimal traffic.  Writes roofline_rhs.json.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cfd import initial, solver
+    from repro.cfd.solver import HITConfig
+    from repro.launch.hlo_analysis import cost_analysis_dict
+
+    cases = [("hit_reduced", HITConfig(n_poly=3, n_elem=2,
+                                       use_kernels=False))]
+    if not quick:
+        cases.append(("hit_24dof", HITConfig(n_poly=5, n_elem=4,
+                                             use_kernels=False)))
+    common.row("# roofline_rhs", "case", "flops", "bytes_unfused",
+               "bytes_fused_ideal", "ai_unfused", "ai_fused")
+    entries = []
+    for name, cfg in cases:
+        ops_d = cfg.operators()
+        u = initial.sample_initial_state(jax.random.PRNGKey(0), cfg)
+        cs = jnp.full(u.shape[:-1], 0.17, u.dtype)
+        compiled = jax.jit(
+            lambda u, cs: solver.navier_stokes_rhs(u, cs, cfg, ops_d)
+        ).lower(u, cs).compile()
+        cost = cost_analysis_dict(compiled)
+        flops = float(cost.get("flops", 0.0))
+        bytes_unfused = float(cost.get("bytes accessed", 0.0))
+        # fused ideal: read state + cs, write rhs — intermediates in VMEM
+        bytes_fused = float((2 * u.size + cs.size) * u.dtype.itemsize)
+        entry = {
+            "case": name,
+            "flops": flops,
+            "bytes_unfused": bytes_unfused,
+            "bytes_fused_ideal": bytes_fused,
+            "ai_unfused": flops / bytes_unfused if bytes_unfused else None,
+            "ai_fused": flops / bytes_fused if bytes_fused else None,
+        }
+        entries.append(entry)
+        common.row("roofline_rhs", name, f"{flops:.3e}",
+                   f"{bytes_unfused:.3e}", f"{bytes_fused:.3e}",
+                   f"{entry['ai_unfused']:.1f}" if entry["ai_unfused"]
+                   else "", f"{entry['ai_fused']:.1f}"
+                   if entry["ai_fused"] else "")
+    common.save_json("roofline_rhs.json", {"entries": entries})
+    return {"n_rhs_entries": len(entries)}
+
+
 def run(quick: bool = True) -> dict:
+    out = rhs_kernel_entry(quick=quick)
     if not os.path.isdir(DRYRUN_DIR) or not os.listdir(DRYRUN_DIR):
         print("no dry-run artifacts found; run "
               "`python -m repro.launch.dryrun --all --mesh both` first")
-        return {}
+        return out
     rows = print_table("single")
     ok = [r for r in rows if r["status"] == "ok"]
     if ok:
@@ -65,7 +121,7 @@ def run(quick: bool = True) -> dict:
         common.row("# hillclimb-candidates",
                    f"worst_fraction={worst['arch']}/{worst['shape']}",
                    f"most_collective={coll['arch']}/{coll['shape']}")
-    return {"n_cells": len(rows)}
+    return {**out, "n_cells": len(rows)}
 
 
 if __name__ == "__main__":

@@ -82,13 +82,28 @@ class ChannelConfig:
     perturb: float = 0.08
     # Pallas kernels for the gradient, eddy-viscosity and wall-model hot
     # spots.  None = auto (kernels.default_impl(): ON and compiled on TPU,
-    # off elsewhere); True/False force the choice (off-TPU forced-on runs in
-    # interpret mode — the parity-test configuration).
+    # off elsewhere; overridable via REPRO_KERNELS); True/False force the
+    # choice (off-TPU forced-on runs in interpret mode — the parity-test
+    # configuration).
     use_kernels: bool | None = None
+    # Rollout compute precision: "fp32" (default, bit-exact legacy path) or
+    # "bf16" (state advanced in bfloat16 inside `advance_rl_interval`;
+    # kernel-internal math, observations, reward and the PPO update stay
+    # float32).  Same contract as HITConfig.precision; gated by
+    # tests/test_precision.py.
+    precision: str = "fp32"
 
     @property
     def n(self) -> int:
         return self.n_poly + 1
+
+    @property
+    def compute_dtype(self):
+        """Rollout state dtype resolved from `precision` (validated here)."""
+        if self.precision not in ("fp32", "bf16"):
+            raise ValueError(f"unknown precision: {self.precision!r} "
+                             f"(expected 'fp32' or 'bf16')")
+        return jnp.bfloat16 if self.precision == "bf16" else jnp.float32
 
     @property
     def kernels_enabled(self) -> bool:
@@ -494,9 +509,11 @@ def rk_substep(u: jax.Array, scale_bot: jax.Array, scale_top: jax.Array,
     dt = jnp.asarray(cfg.dt, dtype=u.dtype)
     du = jnp.zeros_like(u)
     for stage in range(5):
-        rhs = channel_rhs(u, scale_bot, scale_top, cfg, ops)
-        du = _RK_A[stage] * du + dt * rhs
-        u = u + _RK_B[stage] * du
+        # cast + float(): keep the carry in the rollout compute dtype (the
+        # bf16 path; both are no-ops for fp32 — see solver.rk_substep)
+        rhs = channel_rhs(u, scale_bot, scale_top, cfg, ops).astype(u.dtype)
+        du = float(_RK_A[stage]) * du + dt * rhs
+        u = u + float(_RK_B[stage]) * du
     return u
 
 
@@ -506,15 +523,19 @@ def advance_rl_interval(u: jax.Array, scale_bot: jax.Array,
                         cfg: ChannelConfig) -> jax.Array:
     """Advance the channel LES by Delta t_RL under fixed wall-stress scaling
     (one MDP transition).  u: (..., Kx,Ky,Kz,n,n,n,5); scale_bot/scale_top:
-    per-wall-element scaling (..., Kx, Kz), broadcast to face nodes here."""
+    per-wall-element scaling (..., Kx, Kz), broadcast to face nodes here.
+    With `cfg.precision == "bf16"` the state advances in bfloat16 and is
+    cast back to float32 at the boundary (obs/reward/PPO stay float32)."""
     ops = cfg.operators()
     n = cfg.n
     to_nodes = lambda s: jnp.broadcast_to(s[..., None, None],
                                           s.shape + (n, n))
     sb, st = to_nodes(scale_bot), to_nodes(scale_top)
+    dtype = cfg.compute_dtype
+    u, sb, st = u.astype(dtype), sb.astype(dtype), st.astype(dtype)
 
     def body(u, _):
         return rk_substep(u, sb, st, cfg, ops), None
 
     u, _ = jax.lax.scan(body, u, None, length=cfg.n_substeps)
-    return u
+    return u.astype(jnp.float32)

@@ -63,11 +63,23 @@ class HITConfig:
     k_max: int = 9
     alpha: float = 0.4
     cs_max: float = 0.5
-    # Pallas kernels for the gradient + eddy-viscosity hot spots.  None =
-    # auto (kernels.default_impl(): ON and compiled on TPU, off elsewhere);
-    # True/False force the choice (off-TPU forced-on runs in interpret mode —
-    # the parity-test configuration).
+    # Pallas kernels: with kernels enabled the WHOLE RHS evaluation runs as
+    # one fused mega-kernel launch (kernels/rhs.py — derivative, fluxes,
+    # eddy viscosity, divergence and forcing with intermediates in VMEM).
+    # None = auto (kernels.default_impl(): ON and compiled on TPU, off
+    # elsewhere; overridable via REPRO_KERNELS); True/False force the choice
+    # (off-TPU forced-on runs in interpret mode — the parity-test
+    # configuration).
     use_kernels: bool | None = None
+    # Rollout compute precision.  "fp32" (default) is the bit-exact legacy
+    # path.  "bf16" advances the state in bfloat16 inside
+    # `advance_rl_interval` — the HBM-resident state, RK accumulator and RHS
+    # inputs/outputs drop to 16 bits (kernel-internal math stays float32)
+    # while observations, reward reduction and the PPO update remain
+    # float32.  Opt-in via e.g. `envs.make("hit_les_24dof",
+    # precision="bf16")`; gated by the training-curve-equivalence test in
+    # tests/test_precision.py.
+    precision: str = "fp32"
     # synthetic DNS target spectrum (von Karman-Pao)
     k_peak: float = 4.0
     k_eta: float = 48.0
@@ -82,6 +94,14 @@ class HITConfig:
         from ..kernels.policy import resolve_use_kernels
 
         return resolve_use_kernels(self.use_kernels)
+
+    @property
+    def compute_dtype(self):
+        """Rollout state dtype resolved from `precision` (validated here)."""
+        if self.precision not in ("fp32", "bf16"):
+            raise ValueError(f"unknown precision: {self.precision!r} "
+                             f"(expected 'fp32' or 'bf16')")
+        return jnp.bfloat16 if self.precision == "bf16" else jnp.float32
 
     @property
     def k_tke(self) -> float:
@@ -129,6 +149,7 @@ class HITConfig:
         return {
             "D": jnp.asarray(dg.deriv_matrix(), dtype=jnp.float32),
             "inv_w_end": (float(1.0 / w[0]), float(1.0 / w[-1])),
+            "w": jnp.asarray(w, dtype=jnp.float32),
         }
 
 
@@ -173,35 +194,33 @@ def broadcast_cs(cs_elem: jax.Array, cfg: HITConfig) -> jax.Array:
     )
 
 
-def navier_stokes_rhs(
-    u: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict
-) -> jax.Array:
-    """-div(F_adv - F_visc) + forcing, the full semi-discrete RHS.
+def rhs_gradients(
+    q_prim: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict
+) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 of the unfused RHS: BR1 gradient of (v, T) + Smagorinsky
+    nu_t.  Exposed as a stage so benchmarks/perf_compare.py can time the
+    separate-dispatch (per-stage jit, HBM round-trip) assembly the fused
+    mega-kernel replaces."""
+    d_matrix, inv_w_end = ops["D"], ops["inv_w_end"]
+    grad_prim = dgsem.dg_gradient(q_prim, cfg.dg, d_matrix, inv_w_end)
+    grad_v = grad_prim[..., 0:3, :]
+    s_mag = equations.strain_magnitude(equations.strain_rate(grad_v))
+    nu_t = equations.eddy_viscosity(cs_nodes, cfg.delta_filter, s_mag)
+    return grad_prim, nu_t
 
-    Advective volume terms use *split-form* flux differencing with the
-    Kennedy-Gruber kinetic-energy-preserving two-point flux — FLEXI's
-    stabilization for underresolved turbulence (standard-form collocated
-    DGSEM aliases and blows up on this test case within a few steps).
-    Surface terms use local Lax-Friedrichs; viscous terms are BR1-style
-    central.
-    """
+
+def rhs_divergence(
+    u: jax.Array,
+    prim: tuple[jax.Array, ...],
+    grad_prim: jax.Array,
+    nu_t: jax.Array,
+    cfg: HITConfig,
+    ops: dict,
+) -> jax.Array:
+    """Stage 2 of the unfused RHS: -div(F_adv - F_visc) over the three
+    directions (split-form volume, LLF + BR1-central surfaces)."""
     dg, gas = cfg.dg, cfg.gas
     d_matrix, inv_w_end = ops["D"], ops["inv_w_end"]
-
-    rho, vel, p, temp = equations.conservative_to_primitive(u)
-    e_spec = u[..., 4] / rho
-    prim = (rho, vel, p, e_spec)
-    q_prim = jnp.concatenate([vel, temp[..., None]], axis=-1)
-    if cfg.kernels_enabled:
-        grad_prim, nu_t = kernel_grad_nut(q_prim, cs_nodes, d_matrix,
-                                          inv_w_end, cfg.delta_filter, dg=dg)
-        grad_v = grad_prim[..., 0:3, :]
-    else:
-        grad_prim = dgsem.dg_gradient(q_prim, dg, d_matrix, inv_w_end)
-        grad_v = grad_prim[..., 0:3, :]
-        s_mag = equations.strain_magnitude(equations.strain_rate(grad_v))
-        nu_t = equations.eddy_viscosity(cs_nodes, cfg.delta_filter, s_mag)
-
     rhs = None
     for d in range(3):
         # --- advective: split-form volume + LLF surface -------------------
@@ -225,8 +244,13 @@ def navier_stokes_rhs(
         div_d = dgsem.surface_lift(vol, f_star - hi, f_star_left - lo, d, inv_w_end)
         div_d = div_d * dg.jac
         rhs = -div_d if rhs is None else rhs - div_d
+    return rhs
 
-    # --- Lundgren linear forcing with proportional TKE controller ----------
+
+def rhs_forcing(u: jax.Array, vel: jax.Array, cfg: HITConfig) -> jax.Array:
+    """Stage 3 of the unfused RHS: Lundgren linear forcing with the
+    proportional TKE controller (whole-box quadrature means)."""
+    dg = cfg.dg
     mom = u[..., 1:4]
     mom_mean = dgsem.quadrature_mean(mom, dg)  # (..., 3)
     mom_fluct = mom - mom_mean[..., None, None, None, None, None, None, :]
@@ -236,10 +260,45 @@ def navier_stokes_rhs(
     a_eff = a_eff[..., None, None, None, None, None, None]
     f_mom = a_eff[..., None] * mom_fluct
     f_e = jnp.sum(f_mom * vel, axis=-1, keepdims=True)
-    forcing = jnp.concatenate(
-        [jnp.zeros_like(rhs[..., :1]), f_mom, f_e], axis=-1
+    return jnp.concatenate(
+        [jnp.zeros_like(u[..., :1]), f_mom, f_e], axis=-1
     )
-    return rhs + forcing
+
+
+def navier_stokes_rhs(
+    u: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict
+) -> jax.Array:
+    """-div(F_adv - F_visc) + forcing, the full semi-discrete RHS.
+
+    Advective volume terms use *split-form* flux differencing with the
+    Kennedy-Gruber kinetic-energy-preserving two-point flux — FLEXI's
+    stabilization for underresolved turbulence (standard-form collocated
+    DGSEM aliases and blows up on this test case within a few steps).
+    Surface terms use local Lax-Friedrichs; viscous terms are BR1-style
+    central.
+
+    With `cfg.kernels_enabled` the whole evaluation is ONE fused Pallas
+    launch (kernels/rhs.py: derivative -> fluxes -> eddy viscosity ->
+    divergence + forcing with intermediates in VMEM); otherwise the staged
+    jnp assembly below runs — it is the kernel's validated oracle
+    (tests/test_kernel_parity.py).
+    """
+    if cfg.kernels_enabled:
+        from ..kernels import ops as kops
+
+        return kops.navier_stokes_rhs_fused(
+            u, cs_nodes, ops["D"], ops["w"], inv_w_end=ops["inv_w_end"],
+            jac=cfg.dg.jac, delta=cfg.delta_filter, mu=cfg.gas.mu,
+            prandtl=cfg.prandtl, prandtl_turb=cfg.prandtl_turb,
+            forcing_a0=cfg.forcing_a0, k_tke=cfg.k_tke, impl="kernel")
+
+    rho, vel, p, temp = equations.conservative_to_primitive(u)
+    e_spec = u[..., 4] / rho
+    prim = (rho, vel, p, e_spec)
+    q_prim = jnp.concatenate([vel, temp[..., None]], axis=-1)
+    grad_prim, nu_t = rhs_gradients(q_prim, cs_nodes, cfg, ops)
+    rhs = rhs_divergence(u, prim, grad_prim, nu_t, cfg, ops)
+    return rhs + rhs_forcing(u, vel, cfg)
 
 
 def rk_substep(u: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict) -> jax.Array:
@@ -247,9 +306,14 @@ def rk_substep(u: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict) -> 
     dt = jnp.asarray(cfg.dt, dtype=u.dtype)
     du = jnp.zeros_like(u)
     for stage in range(5):
-        rhs = navier_stokes_rhs(u, cs_nodes, cfg, ops)
-        du = _RK_A[stage] * du + dt * rhs
-        u = u + _RK_B[stage] * du
+        # the cast keeps the carry in the rollout compute dtype: the jnp RHS
+        # promotes a bf16 state to f32 (float32 operator matrices), while
+        # the fused kernel already returns u.dtype — both are no-ops in the
+        # default fp32 path.  RK constants go through float() so the weak
+        # python scalar cannot re-promote a bf16 carry.
+        rhs = navier_stokes_rhs(u, cs_nodes, cfg, ops).astype(u.dtype)
+        du = float(_RK_A[stage]) * du + dt * rhs
+        u = u + float(_RK_B[stage]) * du
     return u
 
 
@@ -257,12 +321,19 @@ def rk_substep(u: jax.Array, cs_nodes: jax.Array, cfg: HITConfig, ops: dict) -> 
 def advance_rl_interval(u: jax.Array, cs_elem: jax.Array, cfg: HITConfig) -> jax.Array:
     """Advance the LES by Delta t_RL under fixed per-element C_s (one MDP
     transition).  This is the unit of work the paper distributes over MPI
-    ranks; here it is one XLA program."""
+    ranks; here it is one XLA program.
+
+    With `cfg.precision == "bf16"` the state is advanced in bfloat16 for
+    the whole interval (the mixed-precision rollout) and cast back to
+    float32 at the boundary, so observations/reward/PPO stay float32."""
     ops = cfg.operators()
     cs_nodes = broadcast_cs(cs_elem, cfg)
+    dtype = cfg.compute_dtype
+    u = u.astype(dtype)
+    cs_nodes = cs_nodes.astype(dtype)
 
     def body(u, _):
         return rk_substep(u, cs_nodes, cfg, ops), None
 
     u, _ = jax.lax.scan(body, u, None, length=cfg.n_substeps)
-    return u
+    return u.astype(jnp.float32)

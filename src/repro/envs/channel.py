@@ -28,6 +28,10 @@ Reward : 2 exp(-l/alpha) - 1 with l the quadrature-weighted relative L2
          error of the x-z mean velocity profile against the Reichardt
          log-law reference — the profile analog of the paper's spectral
          reward.
+
+Registry overrides reach every `ChannelConfig` field, e.g.
+`envs.make("channel_wm", precision="bf16")` advances the flow state in
+bfloat16 (obs/reward/PPO stay float32 — see ChannelConfig.precision).
 """
 from __future__ import annotations
 

@@ -10,6 +10,11 @@ against (a numpy config-time constant, baked into the jitted step).
 Observation channels (named, per `ObsSpec.channel_specs`): the three
 velocity components ('u_x', 'u_y', 'u_z') at every element node, each
 normalized by the forcing-scale rms velocity u_rms.
+
+Registry overrides reach every `HITConfig` field, e.g.
+`envs.make("hit_les_reduced", precision="bf16")` advances the flow state
+in bfloat16 (obs/reward/PPO stay float32 — see HITConfig.precision), and
+`use_kernels=True/False` forces the fused Pallas RHS path on or off.
 """
 from __future__ import annotations
 

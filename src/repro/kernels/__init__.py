@@ -1,5 +1,9 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
+  rhs              fused DGSEM Navier-Stokes RHS mega-kernel: one launch per
+                   element batch covering derivative -> flux -> Smagorinsky
+                   -> divergence + forcing, intermediates in VMEM (the
+                   periodic HIT production path)
   dg_derivative    fused 3-direction DGSEM derivative (solver volume terms)
   smagorinsky      fused strain-rate -> eddy-viscosity chain (paper Eq. 3)
   wall_model       batched Reichardt law-of-the-wall fixed-point inversion
@@ -13,7 +17,9 @@ oracles every kernel is validated against — the three solver kernels in the
 linear_scan in tests/test_kernels.py.  `default_impl()`/`default_interpret()`
 are the single backend policy: kernels are ON and compiled when
 `jax.default_backend() == "tpu"`, and interpret-mode oracles elsewhere —
-configs opt out (or force on) via their `use_kernels` field.
+configs opt out (or force on) via their `use_kernels` field, and the
+`REPRO_KERNELS={kernel,ref,auto}` env var retargets the auto default
+without code edits (see policy.py).
 """
 from . import ops, ref
 from .policy import default_impl, default_interpret

@@ -26,6 +26,7 @@ from .dg_derivative import dg_derivative3 as _dg_pallas
 from .flash_attention import flash_attention as _fa_pallas
 from .linear_scan import linear_scan as _ls_pallas
 from .policy import default_impl
+from .rhs import fused_navier_stokes_rhs as _rhs_pallas
 from .smagorinsky import smagorinsky_nut as _smag_pallas
 from .wall_model import wall_model_tau as _wm_pallas
 
@@ -45,6 +46,24 @@ def smagorinsky_nut(grad_v: jax.Array, cs: jax.Array, delta: float, *,
     if (impl or default_impl()) == "kernel":
         return _smag_pallas(grad_v, cs, delta, block_p=block_p)
     return ref.smagorinsky_nut(grad_v, cs, delta)
+
+
+# --- fused Navier-Stokes RHS -------------------------------------------------
+def navier_stokes_rhs_fused(u: jax.Array, cs_nodes: jax.Array,
+                            d_matrix: jax.Array, w: jax.Array, *,
+                            inv_w_end: tuple[float, float], jac: float,
+                            delta: float, mu: float, prandtl: float,
+                            prandtl_turb: float, forcing_a0: float,
+                            k_tke: float, impl: str | None = None,
+                            block_e: int = 1) -> jax.Array:
+    """One fused periodic-HIT RHS evaluation (see kernels/rhs.py) — the op
+    `cfd/solver.navier_stokes_rhs` dispatches to when kernels are enabled."""
+    kw = dict(inv_w_end=inv_w_end, jac=jac, delta=delta, mu=mu,
+              prandtl=prandtl, prandtl_turb=prandtl_turb,
+              forcing_a0=forcing_a0, k_tke=k_tke)
+    if (impl or default_impl()) == "kernel":
+        return _rhs_pallas(u, cs_nodes, d_matrix, w, block_e=block_e, **kw)
+    return ref.navier_stokes_rhs_fused(u, cs_nodes, d_matrix, w, **kw)
 
 
 # --- wall model --------------------------------------------------------------

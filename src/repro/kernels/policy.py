@@ -13,16 +13,41 @@ both questions resolve here from `jax.default_backend()`:
                           (Pallas interprets; same numerics, any backend) —
                           what every kernel's `interpret=None` resolves to.
 
-This module is a leaf (imports jax only) so the kernel modules themselves
-can use it without cycling through the package __init__.
+A `REPRO_KERNELS={kernel,ref,auto}` environment variable overrides the
+*auto* resolution only — it retargets every `use_kernels=None` config and
+`impl=None` call without editing code (benchmarks/CI forcing one column),
+while an explicit config choice (`use_kernels=True/False`, `impl=...`)
+still wins.  The variable is read at trace time: set it before the first
+jit of a config, since cached programs keep the policy they traced with.
+
+This module is a leaf (imports jax + os only) so the kernel modules
+themselves can use it without cycling through the package __init__.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+_ENV_VAR = "REPRO_KERNELS"
+
+
+def _env_override() -> str | None:
+    val = os.environ.get(_ENV_VAR, "").strip().lower()
+    if not val or val == "auto":
+        return None
+    if val in ("kernel", "ref"):
+        return val
+    raise ValueError(f"{_ENV_VAR}={val!r}: expected 'kernel', 'ref' or "
+                     f"'auto'")
 
 
 def default_impl() -> str:
-    """Implementation the configs pick when `use_kernels` is None (auto)."""
+    """Implementation the configs pick when `use_kernels` is None (auto):
+    the REPRO_KERNELS env override if set, else the backend policy."""
+    override = _env_override()
+    if override is not None:
+        return override
     return "kernel" if jax.default_backend() == "tpu" else "ref"
 
 

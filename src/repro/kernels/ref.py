@@ -72,6 +72,278 @@ def wall_model_tau(u_par: jax.Array, rho_w: jax.Array, *, y_m: float,
     return (rho_w.astype(f32) * u_tau**2).astype(u_par.dtype)
 
 
+# --- fused Navier-Stokes RHS -------------------------------------------------
+# Self-contained single-pass DGSEM RHS for the periodic HIT scenario — the
+# oracle for kernels/rhs.py (the mega-kernel's body calls THIS function on
+# its VMEM block, so kernel and oracle share one op order by construction).
+# The constants and formulas mirror cfd/equations + cfd/dgsem; they are
+# restated here because this module must stay a leaf (imports jax only — the
+# kernels cannot cycle through the cfd package).  Two deliberate deviations
+# from the cfd reference, both bit-identical in exact zeros:
+#   * periodic rolls are slice+concatenate (jnp.roll is a gather that Mosaic
+#     does not lower inside kernel bodies),
+#   * the endpoint surface lift is a concatenation of the two corrected face
+#     slabs around an exact-zero interior (no .at[].add scatter).
+
+_GAMMA = 1.4
+_R_GAS = 1.0
+_CP = _GAMMA * _R_GAS / (_GAMMA - 1.0)
+# element / intra-element node axes of the shared (..., Kx, Ky, Kz, n, n, n,
+# C) state layout (cfd/dgsem.py module docstring)
+_ELEM_AXIS = (-7, -6, -5)
+_NODE_AXIS = (-4, -3, -2)
+
+
+def _roll(x, shift: int, axis: int):
+    """Circular shift by +-1 via slice+concatenate (see note above)."""
+    n = x.shape[axis]
+    if shift == -1:
+        parts = (jax.lax.slice_in_dim(x, 1, n, axis=axis),
+                 jax.lax.slice_in_dim(x, 0, 1, axis=axis))
+    else:
+        parts = (jax.lax.slice_in_dim(x, n - 1, n, axis=axis),
+                 jax.lax.slice_in_dim(x, 0, n - 1, axis=axis))
+    return jnp.concatenate(parts, axis=axis)
+
+
+def _deriv_along(u, d_matrix, direction: int):
+    axis = _NODE_AXIS[direction] + u.ndim
+    moved = jnp.moveaxis(u, axis, -1)
+    return jnp.moveaxis(moved @ d_matrix.T, -1, axis)
+
+
+def _face_slices(u, direction: int):
+    axis = _NODE_AXIS[direction] + u.ndim
+    lo = jax.lax.index_in_dim(u, 0, axis, keepdims=False)
+    hi = jax.lax.index_in_dim(u, u.shape[axis] - 1, axis, keepdims=False)
+    return lo, hi
+
+
+def _neighbor_traces(u, direction: int):
+    lo, hi = _face_slices(u, direction)
+    elem_axis = _ELEM_AXIS[direction] + lo.ndim + 1  # one axis was dropped
+    return hi, _roll(lo, -1, elem_axis)
+
+
+def _surface_lift(du, jump_right, jump_left, direction: int,
+                  inv_w_end: tuple[float, float]):
+    axis = _NODE_AXIS[direction] + du.ndim
+    moved = jnp.moveaxis(du, axis, -1)
+    inv_w0, inv_wn = inv_w_end
+    corr = jnp.concatenate([
+        (-inv_w0 * jump_left)[..., None],
+        jnp.zeros(moved.shape[:-1] + (moved.shape[-1] - 2,), moved.dtype),
+        (inv_wn * jump_right)[..., None],
+    ], axis=-1)
+    return jnp.moveaxis(moved + corr, -1, axis)
+
+
+def _primitives(u):
+    rho = u[..., 0]
+    vel = u[..., 1:4] / rho[..., None]
+    kinetic = 0.5 * rho * jnp.sum(vel * vel, axis=-1)
+    p = (_GAMMA - 1.0) * (u[..., 4] - kinetic)
+    temp = p / (rho * _R_GAS)
+    return rho, vel, p, temp
+
+
+def _mom_flux(base, per_comp, p, direction: int):
+    """Momentum flux columns base_i (+ p on the flux-direction component),
+    assembled per component — the pressure add targets one channel without a
+    scatter or a captured one-hot constant (Pallas-body constraints)."""
+    cols = []
+    for i in range(3):
+        c = base * per_comp[..., i]
+        if i == direction:
+            c = c + p
+        cols.append(c[..., None])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _advective_flux(u, direction: int):
+    rho, vel, p, _ = _primitives(u)
+    vn = vel[..., direction]
+    f_rho = u[..., 1 + direction]
+    f_mom = _mom_flux(vn, u[..., 1:4], p, direction)
+    f_e = (u[..., 4] + p) * vn
+    return jnp.concatenate([f_rho[..., None], f_mom, f_e[..., None]], axis=-1)
+
+
+def _lax_friedrichs(u_l, u_r, direction: int):
+    rho_l, vel_l, p_l, _ = _primitives(u_l)
+    rho_r, vel_r, p_r, _ = _primitives(u_r)
+    c_l = jnp.sqrt(_GAMMA * p_l / rho_l)
+    c_r = jnp.sqrt(_GAMMA * p_r / rho_r)
+    lam = jnp.maximum(jnp.abs(vel_l[..., direction]) + c_l,
+                      jnp.abs(vel_r[..., direction]) + c_r)
+    f_l = _advective_flux(u_l, direction)
+    f_r = _advective_flux(u_r, direction)
+    return 0.5 * (f_l + f_r) - 0.5 * lam[..., None] * (u_r - u_l)
+
+
+def _flux_differencing(prim, d_matrix, direction: int):
+    """Split-form volume integral with the Kennedy-Gruber two-point flux
+    (all-arithmetic-mean; cfd/equations.kennedy_gruber_flux inlined)."""
+    def pairwise(q, is_vec):
+        a = q.ndim + _NODE_AXIS[direction] + (0 if is_vec else 1)
+        moved = jnp.moveaxis(q, a, -2 if is_vec else -1)
+        if is_vec:
+            return moved[..., :, None, :], moved[..., None, :, :]
+        return moved[..., :, None], moved[..., None, :]
+
+    rho, vel, p, e = prim
+    rho_a, rho_b = pairwise(rho, False)
+    vel_a, vel_b = pairwise(vel, True)
+    p_a, p_b = pairwise(p, False)
+    e_a, e_b = pairwise(e, False)
+    rho_m = 0.5 * (rho_a + rho_b)
+    vel_m = 0.5 * (vel_a + vel_b)
+    p_m = 0.5 * (p_a + p_b)
+    e_m = 0.5 * (e_a + e_b)
+    vn = vel_m[..., direction]
+    f_rho = rho_m * vn
+    f_mom = _mom_flux(f_rho, vel_m, p_m, direction)
+    f_e = f_rho * e_m + p_m * vn
+    f_pair = jnp.concatenate([f_rho[..., None], f_mom, f_e[..., None]],
+                             axis=-1)
+    out = 2.0 * jnp.einsum("ij,...ijc->...ic", d_matrix, f_pair)
+    return jnp.moveaxis(out, -2, _NODE_AXIS[direction] + out.ndim)
+
+
+def _viscous_flux(u, grad_prim, nu_t, direction: int, mu: float,
+                  prandtl: float, prandtl_turb: float):
+    rho, vel, _, _ = _primitives(u)
+    grad_v = grad_prim[..., 0:3, :]
+    grad_t = grad_prim[..., 3, :]
+    s_ij = 0.5 * (grad_v + jnp.swapaxes(grad_v, -1, -2))
+    div_v = grad_v[..., 0, 0] + grad_v[..., 1, 1] + grad_v[..., 2, 2]
+    mu_eff = mu + rho * nu_t
+    third = (2.0 / 3.0) * mu_eff * div_v
+    # column d of tau_ij = 2 mu_eff S_ij - (2/3) mu_eff div(v) delta_ij —
+    # only the flux direction's column is needed, so no (3,3) tensor forms
+    cols = []
+    for i in range(3):
+        c = 2.0 * mu_eff * s_ij[..., i, direction]
+        if i == direction:
+            c = c - third
+        cols.append(c[..., None])
+    tau_d = jnp.concatenate(cols, axis=-1)
+    k_eff = _CP * (mu / prandtl + rho * nu_t / prandtl_turb)
+    q_d = -k_eff * grad_t[..., direction]
+    work = jnp.sum(tau_d * vel, axis=-1)
+    zero = jnp.zeros_like(rho)
+    return jnp.concatenate([zero[..., None], tau_d, (work - q_d)[..., None]],
+                           axis=-1)
+
+
+def navier_stokes_rhs_fused(
+    u: jax.Array,
+    cs_nodes: jax.Array,
+    d_matrix: jax.Array,
+    w: jax.Array,
+    *,
+    inv_w_end: tuple[float, float],
+    jac: float,
+    delta: float,
+    mu: float,
+    prandtl: float,
+    prandtl_turb: float,
+    forcing_a0: float,
+    k_tke: float,
+) -> jax.Array:
+    """One fused periodic-HIT Navier-Stokes RHS evaluation — the mega-kernel
+    oracle (kernels/rhs.py runs this exact function on its VMEM block).
+
+    u: (..., Kx, Ky, Kz, n, n, n, 5) conservative state (any leading batch);
+    cs_nodes: per-node Smagorinsky coefficient, shaped like u[..., 0];
+    d_matrix: (n, n) Lagrange derivative matrix; w: (n,) GLL quadrature
+    weights.  Scalars: `inv_w_end` endpoint inverse weights, `jac` the
+    reference-to-physical scaling, `delta` the LES filter width, gas
+    parameters and the Lundgren forcing controller (forcing_a0, k_tke).
+
+    Pipeline (identical op order to cfd/solver.navier_stokes_rhs, the
+    parity contract): primitive decode -> BR1 gradient of (v, T) ->
+    Smagorinsky nu_t -> per-direction split-form Kennedy-Gruber volume +
+    LLF surface + BR1 viscous divergence -> whole-box quadrature-mean
+    forcing.  All math in float32; the result is cast to u.dtype (bf16
+    in/out for the mixed-precision rollout).
+    """
+    out_dtype = u.dtype
+    f32 = jnp.float32
+    u = u.astype(f32)
+    cs_nodes = cs_nodes.astype(f32)
+    d_matrix = d_matrix.astype(f32)
+    w2 = w.astype(f32) * 0.5  # reference [-1,1] -> unit mass
+
+    rho, vel, p, temp = _primitives(u)
+    e_spec = u[..., 4] / rho
+    prim = (rho, vel, p, e_spec)
+    q_prim = jnp.concatenate([vel, temp[..., None]], axis=-1)
+
+    # BR1 gradient of (v, T): central interface averages, periodic wrap
+    grads = []
+    for d in range(3):
+        vol = _deriv_along(q_prim, d_matrix, d)
+        q_left, q_right = _neighbor_traces(q_prim, d)
+        q_star_right = 0.5 * (q_left + q_right)
+        lo, hi = _face_slices(q_prim, d)
+        q_star_left = _roll(q_star_right, 1,
+                            _ELEM_AXIS[d] + q_star_right.ndim + 1)
+        g = _surface_lift(vol, q_star_right - hi, q_star_left - lo, d,
+                          inv_w_end)
+        grads.append(g * jac)
+    grad_prim = jnp.stack(grads, axis=-1)
+
+    # Smagorinsky eddy viscosity (paper Eq. 3)
+    grad_v = grad_prim[..., 0:3, :]
+    s_ij = 0.5 * (grad_v + jnp.swapaxes(grad_v, -1, -2))
+    s_mag = jnp.sqrt(2.0 * jnp.sum(s_ij * s_ij, axis=(-1, -2)) + 1e-30)
+    nu_t = (cs_nodes * delta) ** 2 * s_mag
+
+    rhs = None
+    for d in range(3):
+        # advective: split-form volume + LLF surface
+        vol_adv = _flux_differencing(prim, d_matrix, d)
+        f_adv_nodes = _advective_flux(u, d)
+        u_left, u_right = _neighbor_traces(u, d)
+        f_star_adv = _lax_friedrichs(u_left, u_right, d)
+        # viscous: standard derivative volume + central surface
+        f_visc = _viscous_flux(u, grad_prim, nu_t, d, mu, prandtl,
+                               prandtl_turb)
+        vol_visc = _deriv_along(f_visc, d_matrix, d)
+        fv_left, fv_right = _neighbor_traces(f_visc, d)
+        f_star_visc = 0.5 * (fv_left + fv_right)
+
+        vol = vol_adv - vol_visc
+        f_star = f_star_adv - f_star_visc
+        f_nodes = f_adv_nodes - f_visc
+        lo, hi = _face_slices(f_nodes, d)
+        f_star_left = _roll(f_star, 1, _ELEM_AXIS[d] + f_star.ndim + 1)
+        div_d = _surface_lift(vol, f_star - hi, f_star_left - lo, d,
+                              inv_w_end) * jac
+        rhs = -div_d if rhs is None else rhs - div_d
+
+    # Lundgren linear forcing + proportional TKE controller.  The whole mesh
+    # is resident in the kernel block, so the global quadrature means are
+    # computed in-pass.
+    n_elem_total = u.shape[-7] * u.shape[-6] * u.shape[-5]
+    mom = u[..., 1:4]
+    mom_mean = jnp.einsum("...xyzijkc,i,j,k->...c", mom, w2, w2,
+                          w2) / n_elem_total
+    mom_fluct = mom - mom_mean[..., None, None, None, None, None, None, :]
+    ke_density = 0.5 * jnp.sum(mom * vel, axis=-1, keepdims=True)
+    k_now = jnp.einsum("...xyzijkc,i,j,k->...c", ke_density, w2, w2,
+                       w2)[..., 0] / n_elem_total
+    a_eff = forcing_a0 * jnp.clip(
+        k_tke / jnp.maximum(k_now, 0.1 * k_tke), 0.0, 3.0)
+    a_eff = a_eff[..., None, None, None, None, None, None]
+    f_mom = a_eff[..., None] * mom_fluct
+    f_e = jnp.sum(f_mom * vel, axis=-1, keepdims=True)
+    forcing = jnp.concatenate([jnp.zeros_like(rhs[..., :1]), f_mom, f_e],
+                              axis=-1)
+    return (rhs + forcing).astype(out_dtype)
+
+
 # --- flash attention ---------------------------------------------------------
 def mha(
     q: jax.Array,

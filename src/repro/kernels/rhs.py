@@ -1,0 +1,106 @@
+"""Pallas TPU mega-kernel: one fused DGSEM Navier-Stokes RHS evaluation.
+
+The periodic HIT RHS is ~a dozen separate XLA ops (primitive decode, BR1
+gradient, eddy viscosity, three flux/divergence passes, forcing) with the
+full nodal state written to and re-read from HBM between stages — each
+intermediate is mesh-sized, so an RK5 substep moves ~30 state-sized buffers
+through HBM per RHS call.  This kernel computes the whole evaluation —
+DG derivative -> viscous/convective flux -> Smagorinsky eddy viscosity ->
+divergence + forcing — in a single launch with every intermediate resident
+in VMEM: per grid step it reads one element-batch block of (u, cs_nodes)
+and writes one block of rhs (2 state-sized HBM transfers total).
+
+Grid layout: the environment batch is flattened and gridded in blocks of
+`block_e` WHOLE meshes, (block_e, Kx, Ky, Kz, n, n, n, 5) per block.  A
+block holds complete meshes because the RHS is not element-local: the
+surface exchange couples neighbor elements (periodic rolls along the
+element axes) and the Lundgren forcing needs whole-box quadrature means —
+both stay in-kernel when the mesh is resident.  At paper scale a mesh is
+small (24-DOF HIT: 4^3 elements x 6^3 nodes x 5 channels = 540 KB in f32),
+so mesh + intermediates fit VMEM comfortably; `block_e` trades VMEM
+footprint against grid-step count for large env batches.
+
+The kernel body calls `ref.navier_stokes_rhs_fused` on its block values —
+kernel and oracle share one op order by construction, which is what the
+`kernel_parity` gate (tests/test_kernel_parity.py) pins.  Internal math is
+float32 regardless of I/O dtype; bf16 in/out serves the mixed-precision
+rollout (HITConfig.precision = "bf16").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .policy import resolve_interpret
+
+
+def _kernel(u_ref, cs_ref, d_ref, w_ref, rhs_ref, *, inv_w_end, jac, delta,
+            mu, prandtl, prandtl_turb, forcing_a0, k_tke):
+    rhs_ref[...] = ref.navier_stokes_rhs_fused(
+        u_ref[...], cs_ref[...], d_ref[...], w_ref[...],
+        inv_w_end=inv_w_end, jac=jac, delta=delta, mu=mu, prandtl=prandtl,
+        prandtl_turb=prandtl_turb, forcing_a0=forcing_a0, k_tke=k_tke)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "inv_w_end", "jac", "delta", "mu", "prandtl", "prandtl_turb",
+    "forcing_a0", "k_tke", "block_e", "interpret"))
+def fused_navier_stokes_rhs(
+    u: jax.Array,
+    cs_nodes: jax.Array,
+    d_matrix: jax.Array,
+    w: jax.Array,
+    *,
+    inv_w_end: tuple[float, float],
+    jac: float,
+    delta: float,
+    mu: float,
+    prandtl: float,
+    prandtl_turb: float,
+    forcing_a0: float,
+    k_tke: float,
+    block_e: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused RHS for an arbitrary batch of HIT meshes.
+
+    u: (..., Kx, Ky, Kz, n, n, n, 5); cs_nodes shaped like u[..., 0];
+    d_matrix (n, n); w (n,) GLL weights; scalars as in the oracle.  Returns
+    the RHS with u's shape and dtype.  Matches ref.navier_stokes_rhs_fused.
+    """
+    mesh = u.shape[-7:]
+    n = mesh[3]
+    ub = u.reshape((-1,) + mesh)
+    csb = cs_nodes.reshape((-1,) + mesh[:-1])
+    b = ub.shape[0]
+    block_e = max(1, min(block_e, b))
+    pad = (-b) % block_e
+    if pad:
+        # pad with copies of the first mesh: every padded lane is a valid
+        # flow state, so no inf/nan can leak out of the discarded blocks
+        ub = jnp.concatenate(
+            [ub, jnp.broadcast_to(ub[:1], (pad,) + mesh)], axis=0)
+        csb = jnp.concatenate(
+            [csb, jnp.broadcast_to(csb[:1], (pad,) + mesh[:-1])], axis=0)
+    bp = b + pad
+    out = pl.pallas_call(
+        functools.partial(_kernel, inv_w_end=inv_w_end, jac=jac, delta=delta,
+                          mu=mu, prandtl=prandtl, prandtl_turb=prandtl_turb,
+                          forcing_a0=forcing_a0, k_tke=k_tke),
+        grid=(bp // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e,) + mesh, lambda i: (i,) + (0,) * 7),
+            pl.BlockSpec((block_e,) + mesh[:-1], lambda i: (i,) + (0,) * 6),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_e,) + mesh, lambda i: (i,) + (0,) * 7),
+        out_shape=jax.ShapeDtypeStruct((bp,) + mesh, u.dtype),
+        interpret=resolve_interpret(interpret),
+        name="fused_ns_rhs",
+    )(ub, csb, d_matrix, w)
+    return out[:b].reshape(u.shape)

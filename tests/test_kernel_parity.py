@@ -1,7 +1,8 @@
 """Kernel <-> reference parity gate (`pytest -m kernel_parity -q`).
 
-Every Pallas solver-kernel entry point — `dg_derivative3`, `smagorinsky_nut`
-and `wall_model_tau` — is swept over a dtype x shape x block-size grid in
+Every Pallas solver-kernel entry point — the fused `navier_stokes_rhs`
+mega-kernel, `dg_derivative3`, `smagorinsky_nut` and `wall_model_tau` — is
+swept over a dtype x shape x block-size grid in
 interpret mode against its pure-jnp oracle in `kernels/ref.py`, with pinned
 per-kernel tolerances; plus full-path regressions proving a complete RHS /
 env step with `use_kernels=True` matches the reference assembly.  This gate
@@ -30,6 +31,8 @@ pytestmark = pytest.mark.kernel_parity
 # order (kernels accumulate in f32); bfloat16 tolerances cover the 8-bit
 # mantissa of the in/out casts.
 TOL = {
+    "navier_stokes_rhs_fused": {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+                                jnp.bfloat16: dict(rtol=4e-2, atol=4e-2)},
     "dg_derivative3": {jnp.float32: dict(rtol=2e-4, atol=1e-5),
                        jnp.bfloat16: dict(rtol=4e-2, atol=4e-2)},
     "smagorinsky_nut": {jnp.float32: dict(rtol=2e-5, atol=1e-7),
@@ -43,6 +46,65 @@ def _assert_close(kernel_name, dtype, got, want):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                **TOL[kernel_name][dtype])
+
+
+# --- fused Navier-Stokes RHS mega-kernel ------------------------------------
+def _synthetic_state(key, shape_prefix, cfg):
+    """Physically plausible conservative state: rho ~ 1, subsonic velocity,
+    pressure well clear of vacuum — keeps sqrt/temperature paths benign."""
+    n = cfg.n_poly + 1
+    k = cfg.n_elem
+    mesh = shape_prefix + (k, k, k, n, n, n)
+    kr, kv, kp = jax.random.split(key, 3)
+    rho = 1.0 + 0.1 * jax.random.uniform(kr, mesh + (1,))
+    vel = 0.3 * jax.random.normal(kv, mesh + (3,))
+    p = 7.0 + 0.5 * jax.random.uniform(kp, mesh + (1,))
+    e = p / 0.4 + 0.5 * rho * jnp.sum(vel**2, axis=-1, keepdims=True)
+    return jnp.concatenate([rho, rho * vel, e], axis=-1)
+
+
+def _fused_rhs_kwargs(cfg):
+    ops_d = cfg.operators()
+    return ops_d, dict(inv_w_end=ops_d["inv_w_end"], jac=cfg.dg.jac,
+                       delta=cfg.delta_filter, mu=cfg.gas.mu,
+                       prandtl=cfg.prandtl, prandtl_turb=cfg.prandtl_turb,
+                       forcing_a0=cfg.forcing_a0, k_tke=cfg.k_tke)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("prefix,n_poly,n_elem,block_e", [
+    ((), 3, 2, 1),      # single mesh, production-reduced polynomial order
+    ((3,), 3, 2, 2),    # batch with padding (3 % 2 != 0)
+    ((4,), 2, 3, 4),    # K=3 periodic exchange, whole batch in one block
+])
+def test_fused_rhs_parity(prefix, n_poly, n_elem, block_e, dtype):
+    from repro.kernels.rhs import fused_navier_stokes_rhs
+
+    cfg = HITConfig(n_poly=n_poly, n_elem=n_elem, use_kernels=False)
+    ops_d, kw = _fused_rhs_kwargs(cfg)
+    u = _synthetic_state(jax.random.PRNGKey(3), prefix, cfg).astype(dtype)
+    cs = jnp.full(u.shape[:-1], 0.17, dtype)
+    got = fused_navier_stokes_rhs(u, cs, ops_d["D"], ops_d["w"],
+                                  block_e=block_e, interpret=True, **kw)
+    want = ref.navier_stokes_rhs_fused(u, cs, ops_d["D"], ops_d["w"], **kw)
+    assert got.shape == u.shape and got.dtype == u.dtype
+    _assert_close("navier_stokes_rhs_fused", dtype, got, want)
+
+
+def test_fused_rhs_oracle_matches_solver_assembly():
+    """The self-contained `ref.navier_stokes_rhs_fused` oracle reproduces the
+    stage-by-stage solver assembly bit-for-bit (same ops, same order) — the
+    anchor that ties the mega-kernel's parity gate back to the physics."""
+    from repro.cfd import initial
+
+    cfg = HITConfig(n_poly=3, n_elem=2, use_kernels=False)
+    ops_d, kw = _fused_rhs_kwargs(cfg)
+    u = initial.sample_initial_state(jax.random.PRNGKey(4), cfg)
+    cs = jnp.full(u.shape[:-1], 0.17, u.dtype)
+    want = solver.navier_stokes_rhs(u, cs, cfg, ops_d)
+    got = ref.navier_stokes_rhs_fused(u, cs, ops_d["D"], ops_d["w"], **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 # --- dg_derivative3 ---------------------------------------------------------
@@ -144,6 +206,27 @@ def test_channel_rhs_kernel_path_matches_reference():
                                rtol=2e-4, atol=2e-4)
 
 
+def test_hit_env_step_kernel_parity():
+    """Full `hit_les_reduced` env transition with use_kernels=True (fused
+    RHS mega-kernel, interpret off-TPU) matches the reference path."""
+    env_ref = registry.make("hit_les_reduced", use_kernels=False)
+    env_ker = registry.make("hit_les_reduced", use_kernels=True)
+    bank = env_ref.initial_state_bank(jax.random.PRNGKey(9), 1)
+    state, obs0 = env_ref.reset_from_bank(bank, jnp.int32(0))
+    action = jnp.full((env_ref.action_spec.n_elements,), 0.17, jnp.float32)
+    res_ref = env_ref.step(state, action)
+    res_ker = env_ker.step(state, action)
+    np.testing.assert_allclose(np.asarray(res_ker.state.u),
+                               np.asarray(res_ref.state.u),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res_ker.obs),
+                               np.asarray(res_ref.obs),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(res_ker.reward), float(res_ref.reward),
+                               atol=1e-4)
+    assert bool(res_ker.done) == bool(res_ref.done)
+
+
 def test_channel_env_step_kernel_parity():
     """Full `channel_wm` env transition (one RL interval: n_substeps x 5 RK
     stages, obs + reward) with use_kernels=True matches the reference path
@@ -164,3 +247,29 @@ def test_channel_env_step_kernel_parity():
     np.testing.assert_allclose(float(res_ker.reward), float(res_ref.reward),
                                atol=1e-4)
     assert bool(res_ker.done) == bool(res_ref.done)
+
+
+# --- REPRO_KERNELS env override ---------------------------------------------
+def test_repro_kernels_env_override(monkeypatch):
+    """The env var retargets only the *auto* resolution: default_impl() and
+    resolve_use_kernels(None) follow it, explicit choices still win."""
+    from repro.kernels import policy
+
+    monkeypatch.setenv("REPRO_KERNELS", "kernel")
+    assert policy.default_impl() == "kernel"
+    assert policy.resolve_use_kernels(None) is True
+    assert policy.resolve_use_kernels(False) is False
+
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    assert policy.default_impl() == "ref"
+    assert policy.resolve_use_kernels(None) is False
+    assert policy.resolve_use_kernels(True) is True
+
+    backend_default = "kernel" if jax.default_backend() == "tpu" else "ref"
+    for val in ("auto", ""):
+        monkeypatch.setenv("REPRO_KERNELS", val)
+        assert policy.default_impl() == backend_default
+
+    monkeypatch.setenv("REPRO_KERNELS", "bogus")
+    with pytest.raises(ValueError, match="REPRO_KERNELS"):
+        policy.default_impl()
