@@ -52,12 +52,14 @@ def run_wall_model(quick: bool = True) -> dict:
 
     from repro.kernels import default_impl, ops
 
+    from repro.analysis import trace_audit
+
     backend = jax.default_backend()
     common.row("# perf_wall_model", "backend", "points", "impl", "median_s",
                "note")
     sizes = [4096] if quick else [4096, 65536, 1048576]
     kw = dict(y_m=0.05, nu=5e-3, kappa=0.41, iters=8)
-    results = []
+    results, compile_counts = [], {}
     for p in sizes:
         ks = jax.random.split(jax.random.PRNGKey(0), 2)
         u_par = jax.random.uniform(ks[0], (p,), minval=1e-3, maxval=3.0)
@@ -67,14 +69,21 @@ def run_wall_model(quick: bool = True) -> dict:
             # eager ref column would record dispatch overhead as kernel wins
             fn = jax.jit(lambda u, r, impl=impl:
                          ops.wall_model_tau(u, r, impl=impl, **kw))
-            t = common.timeit(fn, u_par, rho, warmup=2, iters=5)
+            # published numbers are retrace-certified: the fresh jit must
+            # compile exactly once across warmup + timed iterations
+            name = f"wall_model_{p}_{impl}"
+            t, counts = trace_audit.certify(
+                {name: fn}, {name: 1},
+                lambda: common.timeit(fn, u_par, rho, warmup=2, iters=5))
+            compile_counts.update(counts)
             note = ("interpret-mode (oracle check, not perf)"
                     if impl == "kernel" and backend != "tpu" else "")
             common.row("perf_wall_model", backend, p, impl, f"{t:.6f}", note)
             results.append({"backend": backend, "points": p, "impl": impl,
                             "median_s": t})
     common.save_json("perf_wall_model.json",
-                     {"default_impl": default_impl(), "rows": results})
+                     {"default_impl": default_impl(), "rows": results,
+                      "certified_compile_counts": compile_counts})
     return {"n_rows": len(results)}
 
 
@@ -104,6 +113,8 @@ def run_rhs(quick: bool = True) -> dict:
     from repro.cfd.solver import HITConfig
     from repro.kernels import default_impl
 
+    from repro.analysis import trace_audit
+
     backend = jax.default_backend()
     common.row("# perf_rhs", "backend", "case", "impl", "median_s", "note")
     cases = [("hit_reduced", HITConfig(n_poly=3, n_elem=2,
@@ -112,7 +123,7 @@ def run_rhs(quick: bool = True) -> dict:
         # the paper's 24-DOF-per-direction production HIT mesh
         cases.append(("hit_24dof", HITConfig(n_poly=5, n_elem=4,
                                              use_kernels=False)))
-    results, speedups = [], {}
+    results, speedups, compile_counts = [], {}, {}
     for name, cfg in cases:
         cfg_k = dataclasses.replace(cfg, use_kernels=True)
         ops_d = cfg.operators()
@@ -151,10 +162,21 @@ def run_rhs(quick: bool = True) -> dict:
             rhs = div_fn(u, (rho, vel, p, e_spec), grad_prim, nu_t)
             return add_fn(rhs, force_fn(u, vel))
 
+        # every jitted program in each column, pinned at one compile across
+        # warmup + timed iterations (the separate column has five)
+        stage_jits = {"prim": prim_fn, "grad": grad_fn, "div": div_fn,
+                      "force": force_fn, "add": add_fn}
+        watched = {"fused": {"fused": fused_fn},
+                   "separate": stage_jits,
+                   "pure_jnp": {"pure_jnp": pure_fn}}
         timings = {}
         for impl, fn in (("fused", fused_fn), ("separate", separate_fn),
                          ("pure_jnp", pure_fn)):
-            t = common.timeit(fn, u, cs, warmup=5, iters=20)
+            t, counts = trace_audit.certify(
+                watched[impl], {k: 1 for k in watched[impl]},
+                lambda: common.timeit(fn, u, cs, warmup=5, iters=20))
+            compile_counts.update(
+                {f"{name}_{impl}_{k}": v for k, v in counts.items()})
             timings[impl] = t
             note = ("interpret-mode (oracle check, not perf)"
                     if impl != "pure_jnp" and backend != "tpu" else "")
@@ -166,7 +188,8 @@ def run_rhs(quick: bool = True) -> dict:
                    f"{speedups[name]:.2f}x", "")
     common.save_json("perf_rhs.json",
                      {"default_impl": default_impl(), "rows": results,
-                      "fused_vs_separate_speedup": speedups})
+                      "fused_vs_separate_speedup": speedups,
+                      "certified_compile_counts": compile_counts})
     return {"n_rhs_rows": len(results)}
 
 

@@ -1,0 +1,18 @@
+"""Static analysis of the compiled-program invariants (`repro-lint`).
+
+Two layers over one finding/report currency (`report.py`):
+
+* **Program auditors** inspect traced artifacts of the registered hot
+  entry points (`entrypoints.py`): `jaxpr_audit` (f64, bf16-interval
+  dtype churn, host callbacks, dropped donation), `trace_audit` (pinned
+  compile counts — no silent retraces), `kernel_audit` (Pallas closure
+  constants, block divisibility, VMEM budget).
+* **Source lint** (`ast_rules`) enforces the repo's jit idioms at the
+  AST level (no numpy/`random` in traced code, `float()`-wrapped table
+  scalars, no `jnp.float64`, `interpret=None` kernel defaults,
+  registry-complete `envs.make` names).
+
+Run via ``repro-lint`` (or ``python -m repro.analysis``); docs in
+`docs/static_analysis.md`.
+"""
+from .report import Finding, Report, RULES  # noqa: F401

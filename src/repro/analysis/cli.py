@@ -1,0 +1,71 @@
+"""`repro-lint`: run the static-analysis gate and emit the report.
+
+    repro-lint                            # AST + jaxpr + kernel layers
+    repro-lint --layers all               # + the trace certification run
+    repro-lint --layers ast               # source lint only (fast)
+    repro-lint --report analysis_report.json
+
+Exit status is 0 iff there are zero unsuppressed findings — the CI
+`static-analysis` job gates on exactly this.  The JSON report is written
+either way so a red run still uploads its artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .report import Report
+
+LAYERS = ("ast", "jaxpr", "kernel", "trace")
+DEFAULT_LAYERS = ("ast", "jaxpr", "kernel")
+
+
+def run_layers(layers: tuple[str, ...], root: str = ".") -> Report:
+    report = Report()
+    if "ast" in layers:
+        from . import ast_rules
+        ast_rules.run(report, root=root)
+    if "jaxpr" in layers:
+        from . import jaxpr_audit
+        jaxpr_audit.run(report)
+    if "kernel" in layers:
+        from . import kernel_audit
+        kernel_audit.run(report)
+    if "trace" in layers:
+        from . import trace_audit
+        trace_audit.run(report)
+    report.meta["layers"] = list(layers)
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--layers", default=",".join(DEFAULT_LAYERS),
+                    help="comma-separated subset of "
+                         f"{','.join(LAYERS)}, or 'all' "
+                         f"(default: {','.join(DEFAULT_LAYERS)}; 'trace' "
+                         "runs a real reduced training run)")
+    ap.add_argument("--report", default="analysis_report.json",
+                    help="path for the machine-readable report "
+                         "(default: %(default)s)")
+    ap.add_argument("--root", default=".",
+                    help="repo root to lint (default: cwd)")
+    args = ap.parse_args(argv)
+
+    layers = (LAYERS if args.layers == "all"
+              else tuple(l.strip() for l in args.layers.split(",") if l.strip()))
+    unknown = set(layers) - set(LAYERS)
+    if unknown:
+        ap.error(f"unknown layer(s) {sorted(unknown)}; choose from {LAYERS}")
+
+    report = run_layers(layers, root=args.root)
+    report.save(args.report)
+    print(report.summary())
+    print(f"report: {args.report}")
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

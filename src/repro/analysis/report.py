@@ -1,0 +1,163 @@
+"""Findings, rules, suppressions and the `analysis_report.json` schema.
+
+Every auditor layer (AST lint, jaxpr/HLO program audits, trace audit,
+kernel audit) reduces to the same currency: a `Finding` — one rule
+violation pinned to a location — collected into a `Report`.  The report
+serializes to `analysis_report.json` (the CI artifact uploaded next to the
+perf JSONs) and renders a human summary; the exit code of `repro-lint` is
+derived from `Report.unsuppressed()`.
+
+Suppressions
+------------
+AST-layer findings can be suppressed inline at the offending line:
+
+    x = np.tanh(y)  # repro-lint: disable=AST001 -- trace-time table build
+
+The reason string after ` -- ` is MANDATORY: a suppression without a
+reason is itself a finding (AST007).  Program-layer findings (JAX*/TRACE*/
+KERN* rules) are suppressed in the entry-point registry instead
+(`entrypoints.EntryPoint.suppress`), again with a required reason — the
+registry is reviewed code, so every waiver is diffable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable
+
+SCHEMA_VERSION = 1
+
+# The rule catalog: id -> (severity, one-line description).  docs/
+# static_analysis.md carries the long-form catalog; tests/test_analysis.py
+# red-teams every id with a deliberately violating fixture.
+RULES: dict[str, tuple[str, str]] = {
+    # --- layer 2: source lint (ast_rules.py) --------------------------------
+    "AST001": ("error", "numpy op inside a function body of a jit-reachable "
+                        "module (host math silently breaks tracing/vmap)"),
+    "AST002": ("error", "Python `random` in a jit-reachable module (untraced "
+                        "RNG breaks replay determinism)"),
+    "AST003": ("error", "bare RK-style numpy scalar constant in arithmetic "
+                        "without float() wrap (f64 weak scalar re-promotes "
+                        "the bf16/f32 carry)"),
+    "AST004": ("error", "jnp.float64 literal (x64 is never enabled in "
+                        "production; f64 doubles HBM traffic)"),
+    "AST005": ("error", "Pallas kernel signature defaults `interpret` to a "
+                        "concrete bool instead of None (backend policy "
+                        "bypass)"),
+    "AST006": ("error", "envs.make() called with a name missing from the "
+                        "registry (example/benchmark rot)"),
+    "AST007": ("error", "repro-lint suppression without a ` -- reason` "
+                        "string"),
+    # --- layer 1: program auditors ------------------------------------------
+    "JAX001": ("error", "float64 value inside a hot jitted program"),
+    "JAX002": ("error", "state-sized f32 round-trip inside the declared bf16 "
+                        "interval (dtype churn)"),
+    "JAX003": ("error", "host callback (pure_callback/debug_callback/"
+                        "io_callback) inside a hot jitted program"),
+    "JAX004": ("error", "declared donated buffer is not aliased in the "
+                        "lowered program (donation silently dropped)"),
+    "JAX005": ("warning", "large output buffer with no donated aliasing on "
+                          "an entry point declared as donating"),
+    "TRACE001": ("error", "entry point retraced beyond its pinned compile "
+                          "count (silent retrace)"),
+    "KERN001": ("error", "Pallas kernel closes over an array constant "
+                         "(fails TPU lowering; pass it as an input)"),
+    "KERN002": ("error", "Pallas block shape does not divide the padded "
+                         "array dim (partial blocks corrupt/wast VMEM)"),
+    "KERN003": ("warning", "estimated kernel VMEM footprint exceeds the "
+                           "budget"),
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation pinned to a location."""
+
+    rule: str
+    message: str
+    file: str = ""
+    line: int = 0
+    entrypoint: str = ""     # program-layer findings: the registry entry
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    @property
+    def severity(self) -> str:
+        return RULES.get(self.rule, ("error", ""))[0]
+
+    @property
+    def location(self) -> str:
+        if self.file:
+            return f"{self.file}:{self.line}" if self.line else self.file
+        return self.entrypoint or "<program>"
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "severity": self.severity,
+            "file": self.file,
+            "line": self.line,
+            "entrypoint": self.entrypoint,
+            "message": self.message,
+            "suppressed": self.suppressed,
+            "suppress_reason": self.suppress_reason,
+        }
+
+
+@dataclasses.dataclass
+class Report:
+    """All findings from one analysis run + layer metadata (compile counts,
+    kernel VMEM estimates, ...) that the JSON artifact carries for CI
+    trend-tracking even when everything is clean."""
+
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def extend(self, findings: Iterable[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def unsuppressed(self) -> list[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def clean(self) -> bool:
+        return not self.unsuppressed()
+
+    def to_dict(self) -> dict:
+        by_rule: dict[str, int] = {}
+        for f in self.unsuppressed():
+            by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "clean": self.clean,
+            "n_findings": len(self.unsuppressed()),
+            "n_suppressed": sum(f.suppressed for f in self.findings),
+            "findings_by_rule": by_rule,
+            "findings": [f.to_dict() for f in self.findings],
+            "meta": self.meta,
+        }
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+    def summary(self) -> str:
+        """Human-readable digest — what `repro-lint` prints."""
+        lines = []
+        live = self.unsuppressed()
+        for f in sorted(live, key=lambda f: (f.rule, f.location)):
+            lines.append(f"{f.severity.upper():7s} {f.rule} {f.location}: "
+                         f"{f.message}")
+        n_sup = sum(f.suppressed for f in self.findings)
+        for f in (f for f in self.findings if f.suppressed):
+            lines.append(f"supp.   {f.rule} {f.location}: "
+                         f"{f.suppress_reason}")
+        verdict = ("clean" if not live
+                   else f"{len(live)} unsuppressed finding(s)")
+        lines.append(f"repro-lint: {verdict}"
+                     + (f" ({n_sup} suppressed)" if n_sup else ""))
+        return "\n".join(lines)

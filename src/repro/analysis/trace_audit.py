@@ -1,0 +1,136 @@
+"""Layer-1 trace auditor: pin compile counts, flag silent retraces.
+
+A jitted entry point that retraces per call (a Python-object static arg
+rebuilt each iteration, a weak-typed scalar flipping dtype, a shape that
+drifts) silently turns a compiled training loop into a compile loop — the
+steady-state invariant of this codebase is **one trace per distinct
+shape**.  XLA never errors on this; it just gets slow.  This auditor makes
+it a gated finding (TRACE001):
+
+* `watch({...})` is the generic primitive — snapshot `_cache_size()` of a
+  set of jitted callables, run a body, report the growth.  The benchmark
+  harnesses wrap their timed sections in it so published perf JSONs carry
+  certified compile counts.
+* `run()` drives a short reduced-HIT training run (rollout -> PPO update
+  -> held-out eval, real `Runner.train`) and pins the exact expected
+  counts for every hot program it exercises.
+
+Compile-count bookkeeping uses jit's `_cache_size()`; counts are measured
+as *growth* between snapshots so a polluted cache (pytest reordering,
+prior cells) cannot fake a pass or a failure.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Any, Callable, Mapping
+
+from .report import Finding, Report
+
+# The pinned contract for one reduced-HIT training run (run() below):
+# exactly one trace per distinct program x batch shape.  `sample_fleet`
+# and `evaluate` are class-level jits on Orchestrator (fleet-batch and
+# batch-1 shapes respectively — one trace each); the env's
+# `advance_rl_interval` is pinned at ZERO standalone compiles: it only
+# ever runs inlined inside those outer programs (nested jits trace under
+# the parent's cache), so any growth here means a host loop is calling
+# the solver eagerly per iteration — the exact dispatch-overhead failure
+# mode the paper's single-program design exists to avoid.
+EXPECTED_REDUCED_HIT: dict[str, int] = {
+    "sample_fleet": 1,
+    "evaluate": 1,
+    "ppo_update": 1,
+    "hit_advance_rl_interval": 0,
+}
+
+
+class TraceWatch:
+    """Context manager: cache-size growth of jitted fns across a body."""
+
+    def __init__(self, fns: Mapping[str, Any]):
+        for name, fn in fns.items():
+            if not hasattr(fn, "_cache_size"):
+                raise TypeError(
+                    f"{name!r} is not a jitted callable (no _cache_size); "
+                    "pass the jax.jit wrapper itself, not the python fn")
+        self.fns = dict(fns)
+        self.growth: dict[str, int] = {}
+        self._before: dict[str, int] = {}
+
+    def __enter__(self) -> "TraceWatch":
+        self._before = {n: f._cache_size() for n, f in self.fns.items()}
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.growth = {n: f._cache_size() - self._before[n]
+                       for n, f in self.fns.items()}
+
+    def check(self, expected: Mapping[str, int],
+              entrypoint: str = "") -> list[Finding]:
+        """TRACE001 findings for every fn whose growth != its pin."""
+        findings = []
+        for name, want in expected.items():
+            got = self.growth.get(name)
+            if got != want:
+                findings.append(Finding(
+                    rule="TRACE001",
+                    message=(f"`{name}` compiled {got} time(s), pinned "
+                             f"{want} — "
+                             + ("silent retrace" if (got or 0) > want
+                                else "stale pin / dead program")),
+                    entrypoint=entrypoint or name))
+        return findings
+
+
+def watch(fns: Mapping[str, Any]) -> TraceWatch:
+    return TraceWatch(fns)
+
+
+def certify(fns: Mapping[str, Any], expected: Mapping[str, int],
+            body: Callable[[], Any]) -> tuple[Any, dict[str, int]]:
+    """Benchmark-harness helper: run `body`, assert the pinned compile
+    counts, return (body result, certified counts) — the counts go into
+    the perf JSON artifact.  Raises RuntimeError on any mismatch: perf
+    numbers from a retracing program must not be published."""
+    with watch(fns) as w:
+        result = body()
+    bad = w.check(expected, entrypoint="benchmark")
+    if bad:
+        raise RuntimeError(
+            "trace certification failed:\n  "
+            + "\n  ".join(f.message for f in bad))
+    return result, dict(w.growth)
+
+
+def run(report: Report | None = None, n_iterations: int = 3) -> Report:
+    """The reduced-HIT certification: a real 3-iteration training run with
+    one held-out eval, against `EXPECTED_REDUCED_HIT`."""
+    import jax
+
+    from .. import envs
+    from ..cfd import solver
+    from ..core.orchestrator import FleetConfig, Orchestrator
+    from ..core.runner import Runner, RunnerConfig
+
+    report = report or Report()
+    # distinctive physics override -> a config no other test has traced, so
+    # every count below starts from a guaranteed-fresh cache entry
+    env = envs.make("hit_les_reduced", t_end=0.41)
+    runner = Runner(
+        env, FleetConfig(n_envs=2, bank_size=5),
+        run_cfg=RunnerConfig(
+            n_iterations=n_iterations, eval_every=2,
+            checkpoint_every=10 * n_iterations, async_checkpoint=False,
+            checkpoint_dir=tempfile.mkdtemp(prefix="repro_trace_audit_")))
+
+    tracked = {
+        "sample_fleet": Orchestrator.sample_fleet,
+        "evaluate": Orchestrator.evaluate,
+        "ppo_update": runner._update,
+        "hit_advance_rl_interval": solver.advance_rl_interval,
+    }
+    with watch(tracked) as w:
+        runner.train(n_iterations, resume=False)
+    report.extend(w.check(EXPECTED_REDUCED_HIT, entrypoint="reduced_hit_run"))
+    report.meta.setdefault("trace_audit", {})["reduced_hit_compile_counts"] = (
+        dict(w.growth))
+    return report

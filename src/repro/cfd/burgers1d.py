@@ -125,7 +125,7 @@ def energy_spectrum(u_uniform: jax.Array) -> jax.Array:
     """Shell spectrum E(k) of (..., N) velocity, sum_k E(k) = 1/2 <u^2>."""
     n = u_uniform.shape[-1]
     uhat = jnp.fft.rfft(u_uniform, axis=-1) / n
-    weight = np.full(n // 2 + 1, 2.0)
+    weight = np.full(n // 2 + 1, 2.0)  # repro-lint: disable=AST001 -- static rfft shell-weight table (shape-only input)
     weight[0] = 1.0
     if n % 2 == 0:
         weight[-1] = 1.0

@@ -533,6 +533,10 @@ def advance_rl_interval(u: jax.Array, scale_bot: jax.Array,
     sb, st = to_nodes(scale_bot), to_nodes(scale_top)
     dtype = cfg.compute_dtype
     u, sb, st = u.astype(dtype), sb.astype(dtype), st.astype(dtype)
+    if dtype != jnp.float32:
+        # operator matrices must follow the compute dtype or every DG
+        # contraction re-promotes the bf16 carry to f32 mid-loop (JAX002)
+        ops = dict(ops, D=ops["D"].astype(dtype), w=ops["w"].astype(dtype))
 
     def body(u, _):
         return rk_substep(u, sb, st, cfg, ops), None

@@ -29,14 +29,14 @@ def _solenoidal_spectral_field(key: jax.Array, n_grid: int, e_target: jax.Array)
 
     k1 = np.fft.fftfreq(n_grid, d=1.0 / n_grid)
     kr = np.fft.rfftfreq(n_grid, d=1.0 / n_grid)
-    kx, ky, kz = np.meshgrid(k1, k1, kr, indexing="ij")
-    k_vec = jnp.asarray(np.stack([kx, ky, kz], axis=-1), dtype=jnp.float32)
+    kx, ky, kz = np.meshgrid(k1, k1, kr, indexing="ij")  # repro-lint: disable=AST001 -- static wavenumber grid (n_grid is static)
+    k_vec = jnp.asarray(np.stack([kx, ky, kz], axis=-1), dtype=jnp.float32)  # repro-lint: disable=AST001 -- static wavenumber grid (n_grid is static)
     k_sq = jnp.sum(k_vec**2, axis=-1, keepdims=True)
     k_sq = jnp.where(k_sq == 0, 1.0, k_sq)
     # Zero the Nyquist planes: the Helmholtz projector is sign-ambiguous there
     # and irfftn's Hermitian symmetrization would reintroduce divergence.
     nyq = n_grid // 2
-    mask = (np.abs(kx) < nyq) & (np.abs(ky) < nyq) & (kz < nyq)
+    mask = (np.abs(kx) < nyq) & (np.abs(ky) < nyq) & (kz < nyq)  # repro-lint: disable=AST001 -- static Nyquist mask (n_grid is static)
     vhat = vhat * jnp.asarray(mask[..., None], dtype=vhat.dtype)
     # Helmholtz projection: remove the compressive component.
     proj = vhat - k_vec * jnp.sum(k_vec * vhat, axis=-1, keepdims=True) / k_sq

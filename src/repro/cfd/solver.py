@@ -331,6 +331,12 @@ def advance_rl_interval(u: jax.Array, cs_elem: jax.Array, cfg: HITConfig) -> jax
     dtype = cfg.compute_dtype
     u = u.astype(dtype)
     cs_nodes = cs_nodes.astype(dtype)
+    if dtype != jnp.float32:
+        # cast the operator matrices to the compute dtype too, or every
+        # D @ u / quadrature contraction re-promotes the carry to f32 and
+        # demotes it back each RK stage (a state-sized round trip per
+        # substep — the churn JAX002 guards against)
+        ops = dict(ops, D=ops["D"].astype(dtype), w=ops["w"].astype(dtype))
 
     def body(u, _):
         return rk_substep(u, cs_nodes, cfg, ops), None

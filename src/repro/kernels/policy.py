@@ -30,16 +30,27 @@ import os
 import jax
 
 _ENV_VAR = "REPRO_KERNELS"
+ACCEPTED = ("kernel", "ref", "auto")
 
 
 def _env_override() -> str | None:
-    val = os.environ.get(_ENV_VAR, "").strip().lower()
+    raw = os.environ.get(_ENV_VAR, "")
+    val = raw.strip().lower()
     if not val or val == "auto":
         return None
     if val in ("kernel", "ref"):
         return val
-    raise ValueError(f"{_ENV_VAR}={val!r}: expected 'kernel', 'ref' or "
-                     f"'auto'")
+    raise ValueError(
+        f"invalid {_ENV_VAR}={raw!r}: accepted values are "
+        f"{', '.join(repr(a) for a in ACCEPTED)} ('auto' and unset both "
+        "mean backend policy: kernels compiled on TPU, reference jnp "
+        "elsewhere)")
+
+
+# Fail at import, not at the first kernel dispatch deep inside a trace: a
+# typo'd REPRO_KERNELS in a batch script should kill the job immediately
+# with the accepted set, not after minutes of setup.
+_env_override()
 
 
 def default_impl() -> str:
