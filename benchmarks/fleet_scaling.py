@@ -1,8 +1,11 @@
-"""Fleet-scaling benchmark: broker throughput + pipeline overlap.
+"""Fleet-scaling benchmark: broker throughput, pipeline overlap, the
+single fleet program vs per-scenario dispatch, and multi-host scaling.
 
     PYTHONPATH=src python -m benchmarks.fleet_scaling
+    PYTHONPATH=src python -m benchmarks.fleet_scaling \
+        --sections single_program,scaling
 
-Two measurements on the mixed reduced fleet (hit_les + channel_wm +
+Four measurements on the mixed reduced fleet (hit_les + channel_wm +
 burgers — the heterogeneous benchmark cell):
 
   * broker throughput — sustained donated-push rate into a per-scenario
@@ -10,16 +13,37 @@ burgers — the heterogeneous benchmark cell):
     paper's KeyDB PUT path, whose Sec. 3.3 transfer overhead this
     subsystem removes;
   * pipeline overlap — wall time per iteration of the double-buffered
-    pipelined FleetRunner against the SYNCHRONOUS sum of its own rollout
-    and update phases, on identical jitted programs.  The headline check:
-    pipelined wall time must sit strictly below t_sample + t_update
-    (`overlap_ok` in the artifact — the fleet CI acceptance bar).
+    pipelined FleetRunner (per-scenario DISPATCH path) against the
+    SYNCHRONOUS sum of its own rollout and update phases, on identical
+    jitted programs.  The headline check: pipelined wall time must sit
+    strictly below t_sample + t_update (`overlap_ok` in the artifact);
+  * single program vs dispatch — the SAME pipelined iteration as ONE
+    compiled super-batch program (`fleet/superbatch.py`, the PR-8 default)
+    against the per-scenario dispatch fallback, equal-cost fleet so the
+    super-batch carries zero padding.  Artifact key:
+    `single_program_vs_dispatch_speedup` (>= 1.0 is the acceptance bar);
+  * scaling — strong (fixed fleet, growing `data` axis) and weak (fixed
+    envs per device) rows over forced host-platform device counts, each
+    measured in a fresh subprocess (XLA_FLAGS must be set before jax
+    initializes), plus 2-process `jax.distributed` rows timing each
+    host's local shard of the collective-free rollout region
+    (phase "rollout_shard" — the CPU runtime cannot execute cross-process
+    programs, see launch/mesh.py).
+
+Every timed loop is compile-certified under the trace auditor
+(`trace_audit.watch`): the published JSON carries the certified compile
+counts, and any retrace inside a timed region fails the run.
 
 Artifact: benchmarks/artifacts/perf_fleet.json.
 """
 from __future__ import annotations
 
+import json
+import os
 import shutil
+import socket
+import subprocess
+import sys
 import time
 
 from . import common
@@ -73,17 +97,18 @@ def run_broker(quick: bool = True) -> dict:
     return {"items": results}
 
 
-def _fresh_runner(pipelined: bool, tmpdir: str, n_envs: int):
+def _fresh_runner(pipelined: bool, tmpdir: str, n_envs: int, *,
+                  single_program: bool = False, costs=None, mesh=None):
     from repro import fleet
     from repro.fleet.pipeline import FleetRunnerConfig
 
     shutil.rmtree(tmpdir, ignore_errors=True)
     return fleet.make_fleet_runner(
-        FLEET, total_envs=n_envs,
+        FLEET, total_envs=n_envs, costs=costs, mesh=mesh,
         run_cfg=FleetRunnerConfig(
             n_iterations=10_000, eval_every=10_000, checkpoint_every=10_000,
             checkpoint_dir=tmpdir, async_checkpoint=False,
-            pipelined=pipelined))
+            pipelined=pipelined, single_program=single_program))
 
 
 def run_pipeline(quick: bool = True) -> dict:
@@ -145,15 +170,280 @@ def run_pipeline(quick: bool = True) -> dict:
     }
 
 
-def run(quick: bool = True) -> dict:
-    payload = {"broker": run_broker(quick), "pipeline": run_pipeline(quick)}
+def run_single_program(quick: bool = True) -> dict:
+    """ONE compiled super-batch program vs per-scenario dispatch, same
+    pipelined iteration semantics, equal-cost fleet (zero padding)."""
+    import jax
+
+    from repro.analysis import trace_audit
+    from repro.core.orchestrator import Orchestrator
+
+    n_envs = 6 if quick else 24
+    n_iters = 6 if quick else 20
+    base = common.ARTIFACTS + "/fleet_bench"
+    costs = {name: 1.0 for name in FLEET}   # equal split -> zero padding
+
+    n_passes = 3   # best-of passes: host jitter dwarfs a 6-iter loop
+
+    def timed_passes(runner, k0: int) -> tuple[float, int]:
+        best, k = float("inf"), k0
+        for _ in range(n_passes):
+            t0 = time.perf_counter()
+            for _ in range(n_iters):
+                runner.run_iteration_pipelined(k)
+                k += 1
+            jax.block_until_ready(runner.params)
+            best = min(best, (time.perf_counter() - t0) / n_iters)
+        return best, k
+
+    dispatch = _fresh_runner(True, base + "_dispatch", n_envs, costs=costs)
+    dispatch.train(1, resume=False)         # compile + warm every program
+    with trace_audit.watch({"sample_fleet": Orchestrator.sample_fleet,
+                            "fleet_update": dispatch._update}) as wd:
+        t_dispatch, _ = timed_passes(dispatch, 1)
+    bad = wd.check({"sample_fleet": 0, "fleet_update": 0})
+    if bad:
+        raise RuntimeError("; ".join(f.message for f in bad))
+
+    prog_runner = _fresh_runner(True, base + "_prog", n_envs,
+                                single_program=True, costs=costs)
+    prog_runner.train(1, resume=False)
+    prog = prog_runner.program
+    padding = {n: prog.b_pad[n] - prog.n_envs[n] for n in prog.names}
+    with trace_audit.watch({"fleet_program_step": prog._step}) as wp:
+        t_program, _ = timed_passes(prog_runner, 1)
+    bad = wp.check({"fleet_program_step": 0})
+    if bad:
+        raise RuntimeError("; ".join(f.message for f in bad))
+
+    speedup = t_dispatch / t_program if t_program > 0 else 0.0
+    common.row("# perf_fleet_single_program", "n_envs", "iters",
+               "t_dispatch_s", "t_program_s", "speedup", "ok")
+    common.row("perf_fleet_single_program", n_envs, n_iters,
+               round(t_dispatch, 4), round(t_program, 4), round(speedup, 3),
+               speedup >= 1.0)
+    return {
+        "n_envs": n_envs,
+        "n_iterations": n_iters,
+        "scenarios": list(FLEET),
+        "padding_rows": padding,
+        "t_dispatch_s": t_dispatch,
+        "t_program_s": t_program,
+        "single_program_vs_dispatch_speedup": speedup,
+        "speedup_ok": bool(speedup >= 1.0),
+        "certified_compile_counts": {**wd.growth, **wp.growth},
+    }
+
+
+# Worker for the per-device-count rows: XLA_FLAGS must force the host
+# device count BEFORE jax initializes, hence a fresh subprocess per row.
+_SCALING_WORKER = r"""
+import json, os, sys, time
+spec = json.loads(sys.argv[1])
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           f" --xla_force_host_platform_device_count={spec['n_devices']}")
+import jax
+from repro.analysis import trace_audit
+from repro.launch import mesh as mesh_lib
+from benchmarks.fleet_scaling import FLEET, _fresh_runner
+
+mesh = mesh_lib.make_fleet_mesh()
+runner = _fresh_runner(True, spec["tmpdir"], spec["n_envs"],
+                       single_program=True, mesh=mesh,
+                       costs={n: 1.0 for n in FLEET})
+prog = runner.program
+runner.train(1, resume=False)   # compile + warm
+# one more warm step: with a real mesh the first step's outputs pick up
+# explicit shardings, so the program reaches its steady-state compiled
+# form on the SECOND call — only then is the zero-retrace pin fair
+runner.run_iteration_pipelined(1)
+jax.block_until_ready(runner.params)
+with trace_audit.watch({"fleet_program_step": prog._step}) as w:
+    t0 = time.perf_counter()
+    for k in range(2, 2 + spec["n_iters"]):
+        runner.run_iteration_pipelined(k)
+    jax.block_until_ready(runner.params)
+    t_step = (time.perf_counter() - t0) / spec["n_iters"]
+bad = w.check({"fleet_program_step": 0})
+if bad:
+    raise RuntimeError("; ".join(f.message for f in bad))
+print("RESULT " + json.dumps({
+    "n_devices": spec["n_devices"], "n_envs": spec["n_envs"],
+    "n_data": prog.n_data, "t_step_s": t_step,
+    "certified_compile_counts": dict(w.growth)}), flush=True)
+"""
+
+# Worker for the 2-process distributed rows: each process times its LOCAL
+# shard of the collective-free rollout region (the CPU runtime cannot run
+# cross-process programs — launch/mesh.py module docstring).
+_DISTRIBUTED_WORKER = r"""
+import json, os, sys, time
+spec = json.loads(sys.argv[1])
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=2")
+os.environ["JAX_COORDINATOR_ADDRESS"] = spec["coordinator"]
+os.environ["JAX_NUM_PROCESSES"] = str(spec["num_processes"])
+os.environ["JAX_PROCESS_ID"] = str(spec["process_id"])
+import jax
+from repro.analysis import trace_audit
+from repro.launch import mesh as mesh_lib
+from benchmarks.fleet_scaling import FLEET, _fresh_runner
+
+assert mesh_lib.init_distributed()
+assert jax.process_count() == spec["num_processes"]
+fleet_mesh = mesh_lib.make_fleet_mesh()   # spans every process
+runner = _fresh_runner(True, spec["tmpdir"], spec["n_envs"],
+                       costs={n: 1.0 for n in FLEET})
+from repro.fleet import superbatch as sb_lib
+prog = sb_lib.FleetProgram(runner.forch, runner.weights, runner.ppo_cfg,
+                           mesh=mesh_lib.make_local_mesh())
+roll = jax.jit(prog.rollout_super_batch)
+keys = runner._keys(0)
+jax.block_until_ready(roll(runner.params, keys))   # compile + warm
+with trace_audit.watch({"rollout_shard": roll}) as w:
+    t0 = time.perf_counter()
+    for _ in range(spec["n_iters"]):
+        jax.block_until_ready(roll(runner.params, keys))
+    t_roll = (time.perf_counter() - t0) / spec["n_iters"]
+bad = w.check({"rollout_shard": 0})
+if bad:
+    raise RuntimeError("; ".join(f.message for f in bad))
+print("RESULT " + json.dumps({
+    "phase": "rollout_shard", "process_id": spec["process_id"],
+    "num_processes": spec["num_processes"],
+    "global_devices": len(jax.devices()),
+    "local_data_shards": prog.n_data, "n_envs": spec["n_envs"],
+    "t_rollout_s": t_roll,
+    "certified_compile_counts": dict(w.growth)}), flush=True)
+"""
+
+
+def _worker_env() -> dict:
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    return env
+
+
+def _run_worker(script: str, spec: dict, env: dict) -> dict:
+    out = subprocess.run([sys.executable, "-c", script, json.dumps(spec)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"scaling worker failed:\n{out.stdout}\n"
+                           f"{out.stderr}")
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"scaling worker produced no RESULT line:\n"
+                       f"{out.stdout}")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_scaling(quick: bool = True) -> dict:
+    """Strong/weak per-host rows over forced device counts + 2-process
+    distributed rows (each host's local rollout_shard)."""
+    env = _worker_env()
+    base = common.ARTIFACTS + "/fleet_bench_scaling"
+    device_counts = (1, 2) if quick else (1, 2, 4)
+    n_iters = 3 if quick else 10
+    strong_envs = 6 if quick else 24        # fixed fleet, growing data axis
+    per_device = 3 if quick else 12         # weak: fixed envs per device
+
+    strong, weak = [], []
+    common.row("# perf_fleet_scaling", "mode", "n_devices", "n_envs",
+               "t_step_s")
+    for nd in device_counts:
+        rec = _run_worker(_SCALING_WORKER, {
+            "n_devices": nd, "n_envs": strong_envs, "n_iters": n_iters,
+            "tmpdir": f"{base}_strong_{nd}"}, env)
+        strong.append(rec)
+        common.row("perf_fleet_scaling", "strong", nd, strong_envs,
+                   round(rec["t_step_s"], 4))
+    for nd in device_counts:
+        rec = _run_worker(_SCALING_WORKER, {
+            "n_devices": nd, "n_envs": per_device * nd, "n_iters": n_iters,
+            "tmpdir": f"{base}_weak_{nd}"}, env)
+        weak.append(rec)
+        common.row("perf_fleet_scaling", "weak", nd, per_device * nd,
+                   round(rec["t_step_s"], 4))
+
+    # 2-process distributed rows: per-host local rollout_shard times
+    coordinator = f"127.0.0.1:{_free_port()}"
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _DISTRIBUTED_WORKER, json.dumps({
+            "coordinator": coordinator, "num_processes": 2,
+            "process_id": pid, "n_envs": strong_envs, "n_iters": n_iters,
+            "tmpdir": f"{base}_dist_{pid}"})],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True) for pid in range(2)]
+    outs = [p.communicate(timeout=1200)[0] for p in procs]
+    distributed = []
+    for pid, (p, out) in enumerate(zip(procs, outs)):
+        if p.returncode != 0:
+            raise RuntimeError(f"distributed worker {pid} failed:\n{out}")
+        rec = next(json.loads(line[len("RESULT "):])
+                   for line in out.splitlines()
+                   if line.startswith("RESULT "))
+        distributed.append(rec)
+        common.row("perf_fleet_scaling", "distributed", rec["process_id"],
+                   rec["n_envs"], round(rec["t_rollout_s"], 4))
+    return {"strong": strong, "weak": weak, "distributed": distributed}
+
+
+SECTIONS = {
+    "broker": run_broker,
+    "pipeline": run_pipeline,
+    "single_program": run_single_program,
+    "scaling": run_scaling,
+}
+
+
+def run(quick: bool = True, sections: tuple[str, ...] = ()) -> dict:
+    names = sections or tuple(SECTIONS)
+    path = os.path.join(common.ARTIFACTS, "perf_fleet.json")
+    payload = {}
+    if sections and os.path.exists(path):
+        with open(path) as f:          # partial runs refresh their section
+            payload = json.load(f)
+    for name in names:
+        payload[name] = SECTIONS[name](quick)
     path = common.save_json("perf_fleet.json", payload)
     print(f"wrote {path}", flush=True)
-    if not payload["pipeline"]["overlap_ok"]:
+    if "pipeline" in payload and not payload["pipeline"]["overlap_ok"]:
         print("WARNING: pipelined wall time did not beat the synchronous "
               "phase sum on this host", flush=True)
+    if ("single_program" in payload
+            and not payload["single_program"]["speedup_ok"]):
+        print("WARNING: the single fleet program did not beat per-scenario "
+              "dispatch on this host", flush=True)
     return payload
 
 
+def main(argv=None) -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--sections", default="",
+                        help="comma-separated subset of "
+                             f"{','.join(SECTIONS)} (default: all)")
+    parser.add_argument("--full", action="store_true",
+                        help="full (slow) shapes instead of quick ones")
+    cli = parser.parse_args(argv)
+    names = tuple(s for s in cli.sections.split(",") if s)
+    for s in names:
+        if s not in SECTIONS:
+            parser.error(f"unknown section {s!r}")
+    run(quick=not cli.full, sections=names)
+
+
 if __name__ == "__main__":
-    run()
+    main()

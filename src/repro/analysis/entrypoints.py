@@ -167,6 +167,30 @@ def _build_fleet_update() -> Built:
         expect_aliased=1, max_undonated_mb=8.0)
 
 
+def _build_fleet_program() -> Built:
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from ..fleet.pipeline import FleetRunnerConfig, make_fleet_runner
+
+    runner = make_fleet_runner(
+        ("hit_les_reduced", "burgers_reduced"), total_envs=2,
+        run_cfg=FleetRunnerConfig(
+            checkpoint_dir=tempfile.mkdtemp(prefix="repro_audit_"),
+            async_checkpoint=False))
+    prog = runner.program
+    args = (runner.params, runner.opt_state, runner.broker,
+            jnp.zeros((), jnp.int32), runner._keys(1))
+    return Built(
+        fn=prog._step_impl, args=args,
+        jit_fn=prog._step,
+        # the optimizer state and the broker rings update in place; params
+        # are NOT donated (the guard may keep the old tree, and the audit
+        # mirrors the dispatch path's expectations)
+        expect_aliased=2, max_undonated_mb=None)
+
+
 def _build_broker_push() -> Built:
     import jax.numpy as jnp
 
@@ -212,6 +236,7 @@ ENTRYPOINTS: tuple[EntryPoint, ...] = (
     EntryPoint("rollout", _build_rollout),
     EntryPoint("ppo_update", _build_ppo_update),
     EntryPoint("fleet_update", _build_fleet_update),
+    EntryPoint("fleet_program", _build_fleet_program),
     EntryPoint("broker_push", _build_broker_push),
     EntryPoint("fused_rhs", _build_fused_rhs),
 )

@@ -98,8 +98,17 @@ class Orchestrator:
     # --- episode setup ------------------------------------------------------
     def draw_initial_states(self, key: jax.Array, n_envs: int | None = None
                             ) -> jax.Array:
-        """Random bank rows (excluding the held-out test state), (B, ...)."""
-        n = n_envs or self.fleet.n_envs
+        """Random bank rows (excluding the held-out test state), (B, ...).
+
+        `n_envs=None` means the configured fleet size; an explicit count
+        must be positive (`n_envs=0` used to fall through a truthiness
+        check and silently sample the FULL fleet).
+        """
+        if n_envs is not None and n_envs <= 0:
+            raise ValueError(
+                f"n_envs must be a positive environment count, got {n_envs} "
+                "(pass None for the configured fleet size)")
+        n = self.fleet.n_envs if n_envs is None else n_envs
         idx = jax.random.randint(key, (n,), 0, self.fleet.bank_size - 1)
         u0 = jnp.take(self.bank, idx, axis=0)
         if self.mesh is not None:

@@ -41,30 +41,43 @@ def rollout(
 
     `policy` optionally substitutes the whole policy callable bundle
     (e.g. a multi-scenario head from `fleet/multitask.py`); left None, the
-    default single-scenario policy is bound from `pcfg` and the scan is
-    bit-identical to the pre-adapter path.
+    default single-scenario policy is bound from `pcfg`.
+
+    The per-step action noise is pre-drawn OUTSIDE the scan (one
+    `normal(key_t, (B,) + action_shape)` per step key — the same stream
+    `PolicyFns.sample` would draw inside) and consumed as scan data.  This
+    keeps the scan body structurally identical to the fleet's super-batch
+    program (`fleet/superbatch.py`), whose padded batch must reproduce
+    this path bit-for-bit on the real rows: drawing inside vs. feeding as
+    data changes XLA's fusion (FMA) choices at the ulp level, so both
+    paths draw the same way.
     """
     pol = policy if policy is not None else policy_lib.policy_fns(pcfg)
     n_steps = env.n_actions
     batch = u0.shape[0]
     state0 = EnvState(u=u0, t_step=jnp.zeros((batch,), jnp.int32))
     step_keys = jax.random.split(key, n_steps)
+    noise = jax.vmap(
+        lambda kk: jax.random.normal(kk, (batch,) + env.action_spec.shape)
+    )(step_keys)
 
-    def step_fn(state: EnvState, key_t: jax.Array):
+    def step_fn(state: EnvState, noise_t: jax.Array):
         obs = env.observe(state)
         if deterministic:
             action = pol.mean(params, obs)
             mean, std = pol.dist(params, obs)
             logp = policy_lib.log_prob(mean, std, action)
         else:
-            action, logp = pol.sample(key_t, params, obs)
+            mean, std = pol.dist(params, obs)
+            action = mean + std * noise_t
+            logp = policy_lib.log_prob(mean, std, action)
         val = pol.value(params, obs)
         res = env.step(state, action)
         out = (obs, action, logp, res.reward, res.done, val)
         return res.state, out
 
     final_state, (obs, actions, log_probs, rewards, dones, values) = jax.lax.scan(
-        step_fn, state0, step_keys
+        step_fn, state0, noise
     )
     last_obs = env.observe(final_state)
     last_value = pol.value(params, last_obs)

@@ -17,15 +17,20 @@ Four pieces (see docs/multi_scenario_training.md for how they compose):
               built from each env's declared ObsSpec/ActionSpec
   pipeline    double-buffered rollout/update overlap (FleetRunner), with
               the core Runner's checkpoint/restore durability contract
+  superbatch  the whole fleet's iteration as ONE compiled program: the
+              scenario-major super-batch rollout shard_map-ped over the
+              mesh `data` axis + the joint update + the broker pushes
 """
-from . import broker, multitask, pipeline, scheduler
+from . import broker, multitask, pipeline, scheduler, superbatch
 from .multitask import MultiTaskConfig, fleet_update
 from .pipeline import FleetOrchestrator, FleetRunner, FleetRunnerConfig, \
     make_fleet_runner
 from .scheduler import FleetSchedule, SubFleet, build_schedule
+from .superbatch import FleetProgram
 
 __all__ = [
     "FleetOrchestrator",
+    "FleetProgram",
     "FleetRunner",
     "FleetRunnerConfig",
     "FleetSchedule",
@@ -38,4 +43,5 @@ __all__ = [
     "multitask",
     "pipeline",
     "scheduler",
+    "superbatch",
 ]

@@ -134,7 +134,14 @@ def latest_traj(broker: Broker, name: str) -> Any:
 def drain_host(broker: Broker) -> dict[str, list[dict]]:
     """Host-side read of every metrics ring, oldest first — the ONLY place
     the broker touches the host.  Called at checkpoint boundaries / end of
-    training, never inside the iteration hot loop."""
+    training, never inside the iteration hot loop.
+
+    Every drained leaf is a plain host value: Python floats/ints for
+    scalar metrics, nested Python lists (`tolist()`) for vector-valued
+    ones — so records are JSON-serializable as drained and consumers never
+    see stray numpy arrays (a vector leaf used to come back as an ndarray,
+    which crashed the runner's `float(v)` record conversion downstream).
+    """
     out: dict[str, list[dict]] = {}
     for name, ring in broker.metrics.items():
         n = int(jax.device_get(size(ring)))
@@ -145,7 +152,8 @@ def drain_host(broker: Broker) -> dict[str, list[dict]]:
         for i in range(n):
             slot = (head - n + i) % cap
             records.append(jax.tree.map(lambda buf: buf[slot].item()
-                                        if buf[slot].ndim == 0 else buf[slot],
+                                        if buf[slot].ndim == 0
+                                        else buf[slot].tolist(),
                                         data))
         out[name] = records
     return out

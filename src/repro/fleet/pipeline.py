@@ -4,9 +4,20 @@
 sub-fleets (one core `Orchestrator` each, so banks, sharding, and the
 jitted rollout programs are exactly the single-scenario machinery), and
 `FleetRunner` drives them through a double-buffered rollout/update pipeline
-brokered by `fleet/broker.py`:
+brokered by `fleet/broker.py`.
 
-    iteration k (pipelined, the default):
+With `single_program=True` (the default) the whole iteration is ONE
+compiled program (`fleet/superbatch.py`): the per-scenario sub-fleets are
+laid out as a scenario-major super-batch, `shard_map`-ped over the mesh's
+`data` axis, and update k + rollout k+1 + the broker pushes all live in a
+single XLA dispatch — cross-scenario stragglers are load-balanced inside
+the program instead of hidden by the dispatch queue.  With
+`single_program=False` the pre-PR-8 per-scenario dispatch path runs
+instead (kept as the measured baseline for
+`benchmarks/fleet_scaling.py: single_program_vs_dispatch_speedup`, and as
+the reference side of the bit-identity conformance pin):
+
+    iteration k (pipelined):
         traj_k        <- broker slot k % 2        (rolled last iteration)
         dispatch  update_k(params_k, traj_k)      -> params_{k+1}
         dispatch  rollout_{k+1}(params_k)         (all sub-fleets)
@@ -14,13 +25,14 @@ brokered by `fleet/broker.py`:
         dispatch  push stats_k -> metrics ring    (no device_get)
 
     Nothing in the loop blocks on the device: the host runs ahead
-    enqueueing work, rollout k+1 and update k overlap in the XLA queue
-    (they share only params_k, which both read), and metric traffic stays
-    device-resident until a checkpoint boundary drains it.  The price is
-    the standard one-iteration policy lag (traj_k was rolled with
-    params_{k-1}); `pipelined=False` recovers the paper's strictly
-    synchronous semantics, and `benchmarks/fleet_scaling.py` measures the
-    overlap win of the default.
+    enqueueing work, rollout k+1 and update k overlap (in ONE program by
+    default, in the XLA queue on the dispatch path — they share only
+    params_k, which both read), and metric traffic stays device-resident
+    until a checkpoint boundary drains it.  The price is the standard
+    one-iteration policy lag (traj_k was rolled with params_{k-1});
+    `pipelined=False` recovers the paper's strictly synchronous semantics,
+    and `benchmarks/fleet_scaling.py` measures the overlap win of the
+    default.
 
 Determinism contract (the multi-scenario extension of core/runner.py's):
 iteration k of scenario i is a pure function of (seed, i, k, params) —
@@ -44,6 +56,7 @@ from ..core.orchestrator import FleetConfig, Orchestrator
 from ..core.runner import RunnerBase, RunnerConfig
 from . import broker as broker_lib
 from . import multitask, scheduler as sched_lib
+from . import superbatch as superbatch_lib
 from .scheduler import FleetSchedule
 
 
@@ -53,11 +66,25 @@ class FleetRunnerConfig(RunnerConfig):
 
     checkpoint_dir: str = "checkpoints/fleet"
     pipelined: bool = True        # False -> paper-synchronous semantics
+    single_program: bool = True   # ONE compiled program per iteration
+                                  # (False -> per-scenario dispatch path)
     bank_size: int = 17           # per-scenario initial-state bank
     traj_capacity: int = 2        # 2 == double buffering (pipeline minimum)
     metrics_capacity: int = 512   # device-resident metric history per scenario
     d_embed: int = 32             # shared-trunk width (multitask policy)
     n_shared_layers: int = 2
+
+
+def _host_record(rec: dict) -> dict:
+    """Drained metric record -> JSON-ready host values.
+
+    Scalar metrics become Python floats; vector-valued metrics arrive from
+    `broker.drain_host` as nested lists and pass through unchanged (a
+    non-scalar leaf used to reach the former unconditional `float(v)` as a
+    numpy array and crash the training loop at drain time).
+    """
+    return {key: v if isinstance(v, list) else float(v)
+            for key, v in rec.items()}
 
 
 class FleetOrchestrator:
@@ -138,21 +165,21 @@ class FleetRunner(RunnerBase):
             metric_templates={"fleet": stats_template},
             metrics_capacity=cfg.metrics_capacity)
 
+        # the single fleet program (the default iteration path): update k,
+        # the shard_map-ped super-batch rollout k+1, and the broker pushes
+        # compiled into one XLA dispatch (fleet/superbatch.py)
+        self.program = (superbatch_lib.FleetProgram(
+            self.forch, self.weights, self.ppo_cfg, mesh=mesh)
+            if cfg.single_program else None)
+
     # --- jitted joint update --------------------------------------------------
     def _update_impl(self, params, opt_state, trajs, k):
-        new_params, new_opt, stats = multitask.fleet_update(
-            params, opt_state, self.ppo_cfg, self.mcfg, trajs, self.weights)
-        # in-graph non-finite guard: the pipelined loop never syncs to
-        # inspect stats, so the revert decision must ride inside the program
-        # (core/runner.py makes the same call on the host instead)
-        ok = jnp.all(jnp.stack([jnp.all(jnp.isfinite(v))
-                                for v in jax.tree.leaves(stats)]))
-        keep = lambda new, old: jax.tree.map(
-            lambda a, b: jnp.where(ok, a, b), new, old)
-        stats = dict(stats)
-        stats["update_ok"] = ok.astype(jnp.float32)
-        stats["iteration"] = k.astype(jnp.float32)
-        return keep(new_params, params), keep(new_opt, opt_state), stats
+        # in-graph non-finite guard rides inside the program: the pipelined
+        # loop never syncs to inspect stats (core/runner.py makes the same
+        # call on the host instead); shared with the single fleet program
+        return superbatch_lib.guarded_fleet_update(
+            params, opt_state, self.ppo_cfg, self.mcfg, trajs, self.weights,
+            k)
 
     # --- checkpoint hooks -----------------------------------------------------
     def _state_tree(self) -> dict:
@@ -191,11 +218,22 @@ class FleetRunner(RunnerBase):
         """Dispatch-only iteration: consume traj_k from the broker, overlap
         rollout k+1 with update k, park the results back in the broker.
 
-        Both programs read `params_k`; the update is ENQUEUED first so that
-        a strictly in-order backend retires params_{k+1} without waiting on
-        rollout k+1 — the next rollout is always the computation left in
-        flight when the host runs ahead (steady-state double buffering).
+        Default (`single_program`): ONE compiled program carries all of it
+        — XLA schedules the dependency-free update-k / rollout-(k+1)
+        subgraphs concurrently, and a straggling scenario inside the
+        super-batch only delays its own rows, not a whole dispatch.
+
+        Dispatch fallback: both programs read `params_k`; the update is
+        ENQUEUED first so that a strictly in-order backend retires
+        params_{k+1} without waiting on rollout k+1 — the next rollout is
+        always the computation left in flight when the host runs ahead
+        (steady-state double buffering).
         """
+        if self.program is not None:
+            self.params, self.opt_state, self.broker = self.program.step(
+                self.params, self.opt_state, self.broker,
+                jnp.asarray(k, jnp.int32), self._keys(k + 1))
+            return
         params_k = self.params
         trajs_k = {name: broker_lib.latest_traj(self.broker, name)
                    for name in self.forch.names}
@@ -238,8 +276,12 @@ class FleetRunner(RunnerBase):
         # pipeline prologue: the broker must hold traj_0 before update 0
         if cfg.pipelined and int(jax.device_get(
                 self.broker.traj[self.forch.names[0]].head)) == 0:
-            self._push_all(self.forch.sample_all(self.params, self._keys(0)),
-                           None)
+            if self.program is not None:
+                self.broker = self.program.prologue(
+                    self.params, self.broker, self._keys(0))
+            else:
+                self._push_all(
+                    self.forch.sample_all(self.params, self._keys(0)), None)
 
         while self.iteration < total:
             k = self.iteration
@@ -271,7 +313,7 @@ class FleetRunner(RunnerBase):
         timing_by_iter = {t["iteration"]: t for t in timings}
         history = []
         for rec in records:
-            rec = {key: float(v) for key, v in rec.items()}
+            rec = _host_record(rec)
             for name in self.forch.names:
                 n_steps = self.forch.orchs[name].env.n_actions
                 rec[f"{name}/return_norm"] = (

@@ -25,6 +25,15 @@ The scheduler also owns the fleet's determinism bookkeeping: per-scenario
 bank seeds (`scenario_seed`) and per-(scenario, iteration) rollout keys
 (`rollout_key`), both pure functions of (base seed, scenario index) so a
 restored run replays bit-identically regardless of scenario count or order.
+
+Contract change (PR 8): `scenario_seed` derives bank seeds through
+`jax.random.fold_in` instead of the former additive prime stride
+`base_seed + 7919*(index+1)`, whose lattice collided across runs —
+`(seed=s, index=i+1)` and `(seed=s+7919, index=i)` produced IDENTICAL
+initial-state banks.  fold_in hashes (seed, index) jointly, so distinct
+(seed, index) pairs give independent banks.  Bank contents therefore differ
+from pre-PR-8 checkpoints; the (seed, index) -> bank mapping remains a pure
+function and replays bit-identically within a run lineage.
 """
 from __future__ import annotations
 
@@ -35,6 +44,7 @@ import math
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..envs.base import Env
@@ -127,10 +137,29 @@ def dryrun_step_cost(name: str, artifact_dir: str | None = None
                 rec = json.load(f)
         except (OSError, json.JSONDecodeError):
             continue
+        # the arch-tag fallback must only fire for scenarios that HAVE a
+        # legacy tag: for any other scenario `_ARCH_EXACT.get(name)` is
+        # None, and a record without an `arch` field would match it
+        # (None == None), pricing the scenario off an unrelated cell
+        arch = _ARCH_EXACT.get(name)
         matches = (rec.get("variant") == name
-                   or _ARCH_EXACT.get(name) == rec.get("arch"))
-        if matches and rec.get("status") == "ok" and rec.get("flops_per_env"):
-            return float(rec["flops_per_env"])
+                   or (arch is not None and arch == rec.get("arch")))
+        if not (matches and rec.get("status") == "ok"):
+            continue
+        # Explicit None-check, NOT truthiness: a record that carries the
+        # field with a measured 0.0 is a broken measurement and must fail
+        # loudly instead of being silently discarded (a zero cost would
+        # give the scenario an infinite share of the env budget).
+        cost = rec.get("flops_per_env")
+        if cost is None:
+            continue  # record without a measurement: keep scanning
+        cost = float(cost)
+        if cost <= 0.0:
+            raise ValueError(
+                f"dry-run artifact {path} reports non-positive "
+                f"flops_per_env={cost!r} for scenario {name!r}; "
+                "re-run the dry-run cell")
+        return cost
     return None
 
 
@@ -208,8 +237,19 @@ def build_schedule(named_envs, total_envs: int, *,
 # --- determinism bookkeeping --------------------------------------------------
 def scenario_seed(base_seed: int, index: int) -> int:
     """Distinct, stable per-scenario seed for the initial-state bank (the
-    orchestrator splits bank/run keys from it)."""
-    return int(base_seed) + 7919 * (index + 1)  # 7919: prime stride
+    orchestrator splits bank/run keys from it).
+
+    Derived via `fold_in(PRNGKey(base_seed), index)` — a joint hash of
+    (seed, index) — rather than the former additive stride
+    `base_seed + 7919*(index+1)`, which collided: `(s, i+1)` and
+    `(s+7919, i)` shared a seed, so two different runs could train on
+    identical initial-state banks.  Pure function of its arguments; the
+    replay contract only requires stability within a run lineage.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(base_seed), index)
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return int(np.asarray(key).ravel()[-1])
 
 
 def rollout_key(seed_key: jax.Array, index: int, iteration) -> jax.Array:

@@ -1,4 +1,4 @@
-"""Production mesh construction.
+"""Production mesh construction + the multi-host entry path.
 
 A function (not a module-level constant) so importing this module never
 touches jax device state — the dry-run sets
@@ -13,10 +13,26 @@ The `pod` axis is the slow (DCN) axis: only data parallelism (env batches /
 LM batches) and gradient reduction cross it (core/compression.py compresses
 that hop).  `model` is the fast ICI axis used for tensor/expert/sequence
 parallelism.
+
+Multi-host: `init_distributed` is the guarded `jax.distributed.initialize`
+entry (idempotent, env-var driven, no-op for single-process runs) and
+`make_fleet_mesh` builds the process-spanning (data, model) mesh from
+`jax.devices()` — which enumerates GLOBAL devices once the distributed
+runtime is up.  The fleet's single program (`fleet/superbatch.py`) runs
+unmodified over that mesh on backends whose runtime supports cross-process
+computations (TPU/GPU).  The CPU PJRT backend does not ("Multiprocess
+computations aren't implemented on the CPU backend"), so the 2-process CPU
+smoke test and the per-host scaling benchmark rows run each process's
+LOCAL shard of the collective-free rollout region instead — see
+`make_local_mesh` and tests/test_fleet_distributed.py.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,15 +41,76 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def _split_data_model(n: int) -> tuple[int, int]:
+    """(data, model) factorization of `n` devices: the largest model width
+    in {4, 2, 1} that divides evenly; the rest is data parallelism."""
+    for model in (4, 2, 1):
+        if n % model == 0:
+            return n // model, model
+    return n, 1
+
+
 def make_host_mesh():
     """Whatever devices exist, as a (data, model) mesh — tests / examples."""
+    data, model = _split_data_model(len(jax.devices()))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def init_distributed(*, coordinator: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None) -> bool:
+    """Guarded `jax.distributed.initialize` — the multi-host entry point.
+
+    Reads the standard launcher variables (JAX_COORDINATOR_ADDRESS,
+    JAX_NUM_PROCESSES, JAX_PROCESS_ID) when arguments are omitted; returns
+    False without touching jax when they are absent (single-process run) or
+    when the runtime is already initialized (idempotent re-entry, e.g. a
+    benchmark calling through a runner that already initialized).  All
+    jax device queries must happen AFTER this returns — `jax.devices()`
+    enumerates the global mesh only once the coordinator handshake is done.
+    """
+    coordinator = coordinator or os.environ.get("JAX_COORDINATOR_ADDRESS")
+    if coordinator is None:
+        return False
+    if num_processes is None:
+        num_processes = int(os.environ.get("JAX_NUM_PROCESSES", "1"))
+    if process_id is None:
+        process_id = int(os.environ.get("JAX_PROCESS_ID", "0"))
+    if num_processes <= 1:
+        return False
+    client = getattr(jax._src.distributed.global_state, "client", None)
+    if client is not None:   # already initialized: keep the first init
+        return True
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+def make_fleet_mesh(*, model: int = 1):
+    """Process-spanning (data, model) mesh over ALL devices — every process
+    must call this with the same topology (jax.make_mesh uses the global
+    device enumeration, identical on every process after
+    `init_distributed`).  Data-major by default: the fleet's super-batch
+    program shards env batches over `data` only, so every device goes to
+    data parallelism unless a model width is requested explicitly."""
     n = len(jax.devices())
-    model = 1
-    for m in (4, 2, 1):
-        if n % m == 0:
-            model = m
-            break
+    if n % model:
+        raise ValueError(f"model={model} does not divide {n} devices")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_local_mesh(*, model: int = 1):
+    """This process's LOCAL devices as a (data, model) mesh — the shard a
+    CPU multi-host process runs of the collective-free rollout region
+    (cross-process programs need a TPU/GPU runtime; see module docstring).
+    """
+    local = jax.local_devices()
+    if len(local) % model:
+        raise ValueError(f"model={model} does not divide {len(local)} "
+                         "local devices")
+    return Mesh(np.asarray(local).reshape(len(local) // model, model),
+                ("data", "model"))
 
 
 # Hardware constants for the roofline terms (TPU v5e).

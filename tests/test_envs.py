@@ -248,22 +248,30 @@ def test_hit_adapter_rollout_matches_free_functions():
     traj = jax.jit(lambda p, u, k: rollout_lib.rollout(p, pcfg, env, u, k)
                    )(params, u0, key)
 
-    # reference: the scan the pre-refactor rollout hard-wired to cfd.env
+    # reference: the same scan hard-wired to the cfd free functions.  The
+    # action noise is pre-drawn as scan data from the identical key stream
+    # — rollout()'s structural contract (see its docstring): drawing inside
+    # the scan instead changes XLA's FMA fusion of `mean + std * noise` at
+    # the ulp level, so the reference must draw the same way.
     e_dns = jnp.asarray(spectra.reference_spectrum(cfg), jnp.float32)
 
     def reference(params, u0, key):
         state0 = hit_kernel.EnvState(
             u=u0, t_step=jnp.zeros((u0.shape[0],), jnp.int32))
+        step_keys = jax.random.split(key, cfg.n_actions)
+        noise = jax.vmap(lambda kk: jax.random.normal(
+            kk, (u0.shape[0],) + env.action_spec.shape))(step_keys)
 
-        def step_fn(state, key_t):
+        def step_fn(state, noise_t):
             obs = hit_kernel.observe(state.u, cfg)
-            action, logp = policy_lib.sample_action(key_t, params, pcfg, obs)
+            mean, std = policy_lib.distribution(params, pcfg, obs)
+            action = mean + std * noise_t
+            logp = policy_lib.log_prob(mean, std, action)
             val = policy_lib.value(params, pcfg, obs)
             res = hit_kernel.step(state, action, cfg, e_dns)
             return res.state, (obs, action, logp, res.reward, val)
 
-        return jax.lax.scan(step_fn, state0,
-                            jax.random.split(key, cfg.n_actions))
+        return jax.lax.scan(step_fn, state0, noise)
 
     _, (obs, actions, log_probs, rewards, values) = jax.jit(reference)(
         params, u0, key)

@@ -308,3 +308,170 @@ def test_update_nonfinite_guard_keeps_params(tmp_path):
     for got, want in zip(jax.tree.leaves(new_params),
                          jax.tree.leaves(runner.params)):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --- PR-8 bugfix regressions ---------------------------------------------------
+def test_scenario_seed_no_additive_collision():
+    """The former additive stride `base_seed + 7919*(index+1)` made
+    `(s, i+1)` and `(s+7919, i)` share a bank seed; the fold_in derivation
+    must keep them distinct (and stay a pure, stable function)."""
+    assert (scheduler.scenario_seed(0, 1)
+            != scheduler.scenario_seed(7919, 0))
+    assert (scheduler.scenario_seed(3, 2)
+            != scheduler.scenario_seed(3 + 7919, 1))
+    # pure + stable within a run lineage
+    assert scheduler.scenario_seed(5, 2) == scheduler.scenario_seed(5, 2)
+    seeds = {scheduler.scenario_seed(s, i)
+             for s in range(4) for i in range(4)}
+    assert len(seeds) == 16
+
+
+def test_draw_initial_states_rejects_zero_envs(tmp_path):
+    """`n_envs=0` used to fall through `n_envs or fleet.n_envs` and
+    silently sample the FULL fleet."""
+    runner = _runner(tmp_path / "zero_envs", n_iterations=1)
+    orch = runner.forch.orchs[FLEET_NAMES[0]]
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="positive"):
+        orch.draw_initial_states(key, n_envs=0)
+    with pytest.raises(ValueError, match="positive"):
+        orch.draw_initial_states(key, n_envs=-2)
+    # None still means the configured fleet size; explicit counts hold
+    assert orch.draw_initial_states(key).shape[0] == orch.fleet.n_envs
+    assert orch.draw_initial_states(key, n_envs=2).shape[0] == 2
+
+
+def test_dryrun_cost_zero_measurement_fails_loudly(tmp_path):
+    """A record carrying a measured `flops_per_env=0.0` used to be
+    silently discarded by a truthiness check; it must raise (a zero cost
+    would hand the scenario an infinite env share).  A record WITHOUT the
+    field keeps scanning to older artifacts."""
+    broken = {"status": "ok", "variant": "burgers_reduced",
+              "flops_per_env": 0.0}
+    with open(tmp_path / "a_fleet_1.json", "w") as f:
+        json.dump(broken, f)
+    with pytest.raises(ValueError, match="non-positive"):
+        scheduler.dryrun_step_cost("burgers_reduced",
+                                   artifact_dir=str(tmp_path))
+    # a record with NO `arch` field must not match a scenario through the
+    # legacy-tag fallback (None == None used to price any unlisted
+    # scenario off an unrelated cell)
+    assert scheduler.dryrun_step_cost("hit_les_24dof",
+                                      artifact_dir=str(tmp_path)) is None
+
+    import os
+    import time as time_mod
+    old = {"status": "ok", "variant": "channel_wm_reduced",
+           "flops_per_env": 5.0e5}
+    with open(tmp_path / "old_fleet_1.json", "w") as f:
+        json.dump(old, f)
+    missing = {"status": "ok", "variant": "channel_wm_reduced"}
+    with open(tmp_path / "new_fleet_1.json", "w") as f:
+        json.dump(missing, f)
+    now = time_mod.time()
+    os.utime(tmp_path / "old_fleet_1.json", (now - 100, now - 100))
+    os.utime(tmp_path / "new_fleet_1.json", (now, now))
+    # the newest record has no measurement -> fall back to the older one
+    assert scheduler.dryrun_step_cost(
+        "channel_wm_reduced", artifact_dir=str(tmp_path)) == 5.0e5
+
+
+def test_broker_drains_vector_metrics_json_ready(tmp_path):
+    """A vector-valued metric leaf used to come back from `drain_host` as
+    a numpy array and crash the runner's `float(v)` record conversion."""
+    from repro.fleet.pipeline import _host_record
+
+    template = {"loss": jnp.zeros(()),
+                "per_scenario_return": jnp.zeros((3,))}
+    b = broker.broker_init({}, metric_templates={"fleet": template},
+                           metrics_capacity=4)
+    item = {"loss": jnp.asarray(0.5),
+            "per_scenario_return": jnp.asarray([1.0, 2.0, 3.0])}
+    b = broker.push_metrics(b, "fleet", item)
+    drained = broker.drain_host(b)["fleet"]
+    assert len(drained) == 1
+    rec = drained[0]
+    assert isinstance(rec["loss"], float) and rec["loss"] == 0.5
+    assert rec["per_scenario_return"] == [1.0, 2.0, 3.0]
+    json.dumps(rec)  # JSON-serializable as drained
+    host = _host_record(rec)
+    assert host["per_scenario_return"] == [1.0, 2.0, 3.0]
+    assert isinstance(host["loss"], float)
+
+
+# --- scheduler _partition edge cases -------------------------------------------
+def test_partition_min_envs_overshoot_shaved():
+    """When the min_envs floor overshoots `total`, the largest members are
+    shaved back (never below min_envs) until the budget holds."""
+    # weights push everything to member 0; min_envs floors 1 and 2 up
+    counts = scheduler._partition([100.0, 1.0, 1.0], 6, 2)
+    assert sum(counts) == 6
+    assert all(c >= 2 for c in counts)
+    assert counts[0] == 2  # shaved from its raw share down to the budget
+
+
+def test_partition_tie_break_by_position():
+    """Equal weights with a non-divisible total: the remainder goes to the
+    EARLIEST members (stable position tie-break, part of the determinism
+    contract)."""
+    assert scheduler._partition([1.0, 1.0, 1.0], 7, 1) == [3, 2, 2]
+    assert scheduler._partition([1.0, 1.0, 1.0, 1.0], 6, 1) == [2, 2, 1, 1]
+    # stable across calls
+    assert (scheduler._partition([2.0, 1.0], 5, 1)
+            == scheduler._partition([2.0, 1.0], 5, 1))
+
+
+def test_partition_property_sums_and_respects_min():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        weights=st.lists(st.floats(min_value=0.01, max_value=100.0,
+                                   allow_nan=False, allow_infinity=False),
+                         min_size=1, max_size=6),
+        extra=st.integers(min_value=0, max_value=40),
+        min_envs=st.integers(min_value=1, max_value=3))
+    def prop(weights, extra, min_envs):
+        total = min_envs * len(weights) + extra
+        counts = scheduler._partition(weights, total, min_envs)
+        assert sum(counts) == total
+        assert all(c >= min_envs for c in counts)
+
+    prop()
+
+
+# --- single fleet program: conformance to per-scenario dispatch ----------------
+def test_super_batch_rollout_bit_identical_to_dispatch(tmp_path):
+    """The one-program super-batch rollout, sliced back to real env
+    counts, reproduces `Orchestrator.sample_fleet` bit-for-bit per
+    scenario at equal seeds (zero padding on a single-`data`-shard mesh;
+    the scan bodies are structurally identical by construction)."""
+    from repro.fleet import superbatch
+
+    runner = _runner(tmp_path / "conform", n_iterations=1)
+    prog = runner.program
+    assert prog is not None
+    keys = runner._keys(0)
+    padded = jax.jit(prog.rollout_super_batch)(runner.params, keys)
+    for m in runner.schedule.members:
+        ref = runner.forch.orchs[m.name].sample_fleet(runner.params,
+                                                      keys[m.name])
+        got = superbatch.slice_traj(padded[m.name], m.n_envs)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_single_program_trains_bit_identical_to_dispatch(tmp_path):
+    """Three iterations end-to-end: the single-program path and the
+    per-scenario dispatch path produce bit-identical params (same seeds,
+    same key schedule, same state tree)."""
+    results = {}
+    for flag in (True, False):
+        runner = _runner(tmp_path / f"sp_{flag}", n_iterations=3,
+                         single_program=flag)
+        runner.train(resume=False)
+        results[flag] = jax.device_get(runner.params)
+    for got, want in zip(jax.tree.leaves(results[True]),
+                         jax.tree.leaves(results[False])):
+        np.testing.assert_array_equal(got, want)
