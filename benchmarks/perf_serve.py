@@ -1,0 +1,210 @@
+"""Serving latency/throughput benchmark: p50/p99 vs batch-bucket size.
+
+    PYTHONPATH=src python -m benchmarks.perf_serve
+    PYTHONPATH=src python -m benchmarks.perf_serve --full
+    PYTHONPATH=src python -m benchmarks.perf_serve --sections latency
+
+Measures the full request path of `repro.serve.ControllerService` — host
+batching + padding, the jitted (scenario, bucket) `serve_step` dispatch,
+and the host readback a caller blocks on — per scenario and per bucket:
+
+  * latency    — per-flush wall times at a fixed bucket occupancy; the
+    published rows carry p50/p99/mean latency and sustained requests/s.
+    Each timed region is compile-certified under the trace auditor at
+    EXACTLY 1 compile (the bucket's first-touch trace; the timed calls
+    after it must all hit the warm program — a retrace poisons tail
+    latency and fails the run);
+  * padding    — occupancy sweep inside one bucket (n_valid = 1..bucket):
+    the cost of a padding row vs a real row.  Every occupancy shares the
+    bucket's single compiled program, so the whole sweep is certified at
+    exactly 1 compile — padding never triggers a retrace.
+
+Artifact: benchmarks/artifacts/perf_serve.json.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from . import common
+
+SCENARIOS = ("hit_les_reduced", "burgers_reduced")
+
+
+def _service(buckets):
+    import jax
+
+    from repro import envs
+    from repro.fleet import multitask
+    from repro.serve import ControllerService
+
+    mcfg = multitask.MultiTaskConfig.from_envs(
+        [(n, envs.make(n)) for n in SCENARIOS])
+    params = multitask.init(jax.random.PRNGKey(0), mcfg)
+    svc = ControllerService(params, mcfg,
+                            buckets=buckets, max_slots=4 * buckets[-1])
+    return svc, mcfg
+
+
+def _obs_rows(mcfg, name: str, n: int):
+    import jax
+    import numpy as np
+
+    head = mcfg.head(name)
+    shape = (n, head.n_elements, *head.spatial, head.channels)
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(1), shape,
+                                        "float32"))
+
+
+def _percentile(sorted_times: list[float], q: float) -> float:
+    idx = min(len(sorted_times) - 1, int(round(q * (len(sorted_times) - 1))))
+    return sorted_times[idx]
+
+
+def run_latency(quick: bool = True) -> dict:
+    import jax
+
+    from repro.analysis import trace_audit
+
+    buckets = (1, 2, 4, 8) if quick else (1, 2, 4, 8, 16, 32)
+    n_iters = 30 if quick else 200
+    svc, mcfg = _service(buckets)
+    common.row("# perf_serve_latency", "scenario", "bucket", "iters",
+               "p50_ms", "p99_ms", "mean_ms", "req_per_s")
+    rows = []
+    for name in SCENARIOS:
+        for bucket in buckets:
+            rows_np = _obs_rows(mcfg, name, bucket)
+
+            def flush_once():
+                for r in rows_np:
+                    svc.submit(name, r)
+                return svc.flush()
+
+            def body():
+                flush_once()          # first-touch: the bucket's one compile
+                flush_once()          # warm
+                times = []
+                for _ in range(n_iters):
+                    t0 = time.perf_counter()
+                    flush_once()      # includes the host readback callers
+                    times.append(time.perf_counter() - t0)   # block on
+                return times
+
+            region = f"serve_{name}_b{bucket}"
+            times, counts = trace_audit.certify(
+                {region: svc._step}, {region: 1}, body)
+            times.sort()
+            p50, p99 = _percentile(times, 0.50), _percentile(times, 0.99)
+            mean = sum(times) / len(times)
+            rps = bucket / mean
+            common.row("perf_serve_latency", name, bucket, n_iters,
+                       round(p50 * 1e3, 3), round(p99 * 1e3, 3),
+                       round(mean * 1e3, 3), round(rps, 1))
+            rows.append({
+                "scenario": name, "bucket": bucket, "n_iters": n_iters,
+                "p50_latency_ms": p50 * 1e3, "p99_latency_ms": p99 * 1e3,
+                "mean_latency_ms": mean * 1e3, "requests_per_s": rps,
+                "certified_compile_counts": counts})
+    # sanity: the telemetry counters saw every request the timer sent
+    stats = svc.stats()
+    expected = {name: sum(b * (n_iters + 2) for b in buckets)
+                for name in SCENARIOS}
+    for name in SCENARIOS:
+        if stats[name]["requests"] != expected[name]:
+            raise RuntimeError(
+                f"telemetry mismatch for {name}: served "
+                f"{stats[name]['requests']}, expected {expected[name]}")
+    return {"backend": jax.default_backend(), "buckets": list(buckets),
+            "scenarios": list(SCENARIOS), "rows": rows,
+            "telemetry": stats}
+
+
+def run_padding(quick: bool = True) -> dict:
+    """Padding-row overhead: one bucket, occupancy swept 1..bucket — all
+    occupancies share the single compiled program (padding is free at
+    compile granularity; the sweep certifies exactly 1 compile total)."""
+    from repro.analysis import trace_audit
+
+    # deliberately NOT a power of two from the latency ladder: jit traces
+    # are cached globally per (fn, shapes, statics), so reusing a latency
+    # bucket here would read as 0 compiles and fail the certification
+    bucket = 6 if quick else 24
+    n_iters = 20 if quick else 100
+    svc, mcfg = _service((bucket,))
+    name = SCENARIOS[0]
+    rows_np = _obs_rows(mcfg, name, bucket)
+
+    def body():
+        out = []
+        for n_valid in range(1, bucket + 1):
+            for r in rows_np[:n_valid]:
+                svc.submit(name, r)
+            svc.flush()               # occupancy's first (and only) trace
+            times = []
+            for _ in range(n_iters):
+                t0 = time.perf_counter()
+                for r in rows_np[:n_valid]:
+                    svc.submit(name, r)
+                svc.flush()
+                times.append(time.perf_counter() - t0)
+            times.sort()
+            out.append({"n_valid": n_valid, "bucket": bucket,
+                        "p50_latency_ms": _percentile(times, 0.50) * 1e3,
+                        "p99_latency_ms": _percentile(times, 0.99) * 1e3})
+        return out
+
+    region = f"serve_padding_b{bucket}"
+    occupancy, counts = trace_audit.certify(
+        {region: svc._step}, {region: 1}, body)
+    common.row("# perf_serve_padding", "bucket", "n_valid", "p50_ms",
+               "p99_ms")
+    for rec in occupancy:
+        common.row("perf_serve_padding", bucket, rec["n_valid"],
+                   round(rec["p50_latency_ms"], 3),
+                   round(rec["p99_latency_ms"], 3))
+    return {"scenario": name, "bucket": bucket, "rows": occupancy,
+            "certified_compile_counts": counts}
+
+
+SECTIONS = {
+    "latency": run_latency,
+    "padding": run_padding,
+}
+
+
+def run(quick: bool = True, sections: tuple[str, ...] = ()) -> dict:
+    import json
+
+    names = sections or tuple(SECTIONS)
+    path = os.path.join(common.ARTIFACTS, "perf_serve.json")
+    payload = {}
+    if sections and os.path.exists(path):
+        with open(path) as f:          # partial runs refresh their section
+            payload = json.load(f)
+    for name in names:
+        payload[name] = SECTIONS[name](quick)
+    path = common.save_json("perf_serve.json", payload)
+    print(f"wrote {path}", flush=True)
+    return payload
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--sections", default="",
+                        help="comma-separated subset of "
+                             f"{','.join(SECTIONS)} (default: all)")
+    parser.add_argument("--full", action="store_true",
+                        help="full (slow) shapes instead of quick ones")
+    cli = parser.parse_args(argv)
+    names = tuple(s for s in cli.sections.split(",") if s)
+    for s in names:
+        if s not in SECTIONS:
+            parser.error(f"unknown section {s!r}")
+    run(quick=not cli.full, sections=names)
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,7 @@ HOT_PREFIXES = (
     "src/repro/fleet/",
     "src/repro/optim/",
     "src/repro/core/",
+    "src/repro/serve/",
 )
 # host-side orchestration inside those packages (never traced)
 HOT_EXCLUDES = (
@@ -53,6 +54,8 @@ HOT_EXCLUDES = (
     "src/repro/fleet/pipeline.py",   # host loop around the jitted programs
     "src/repro/fleet/scheduler.py",  # schedule built once on the host
     "src/repro/kernels/policy.py",   # env-var policy, host only
+    "src/repro/serve/batcher.py",    # host-side request queues / padding
+    "src/repro/serve/loader.py",     # checkpoint restore on the host
 )
 
 _SUPPRESS_RE = re.compile(

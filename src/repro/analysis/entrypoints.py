@@ -227,6 +227,34 @@ def _build_fused_rhs() -> Built:
         args=(u, cs))
 
 
+def _build_serve_step() -> Built:
+    import jax
+    import jax.numpy as jnp
+
+    from .. import envs
+    from ..fleet import multitask
+    from ..serve import service as serve_lib
+
+    name = "hit_les_reduced"
+    mcfg = multitask.MultiTaskConfig.from_envs(
+        [(n, envs.make(n)) for n in (name, "burgers_reduced")])
+    params = multitask.init(jax.random.PRNGKey(0), mcfg)
+    head = mcfg.head(name)
+    obs = jnp.zeros((2, head.n_elements, *head.spatial, head.channels),
+                    jnp.float32)
+    n_valid = jnp.asarray(2, jnp.int32)
+    stats = jnp.zeros((2,), jnp.int32)
+    svc = serve_lib.ControllerService(params, mcfg)
+    return Built(
+        fn=lambda p, o, n, s: serve_lib.serve_step(p, mcfg, name, o, n, s),
+        args=(params, obs, n_valid, stats),
+        jit_fn=svc._step,
+        jit_args=(params, mcfg, name, obs, n_valid, stats),
+        # the telemetry counter is donated (in-place add per dispatch);
+        # actions/values are real outputs and stay small at serving shapes
+        expect_aliased=1, max_undonated_mb=1.0)
+
+
 ENTRYPOINTS: tuple[EntryPoint, ...] = (
     EntryPoint("hit_advance", lambda: _build_hit_advance("fp32")),
     EntryPoint("hit_advance_bf16", lambda: _build_hit_advance("bf16")),
@@ -239,6 +267,7 @@ ENTRYPOINTS: tuple[EntryPoint, ...] = (
     EntryPoint("fleet_program", _build_fleet_program),
     EntryPoint("broker_push", _build_broker_push),
     EntryPoint("fused_rhs", _build_fused_rhs),
+    EntryPoint("serve_step", _build_serve_step),
 )
 
 

@@ -192,10 +192,16 @@ class FleetRunner(RunnerBase):
         self.iteration = int(manifest["meta"]["iteration"])
 
     def _checkpoint_meta(self) -> dict:
+        # scenarios + trunk hyperparameters make the checkpoint
+        # self-describing for the serving loader (repro.serve.load_policy
+        # rebuilds the MultiTaskConfig from this meta alone; older
+        # checkpoints without the trunk fields fall back to shape inference)
         return {**super()._checkpoint_meta(),
                 "scenarios": list(self.forch.names),
                 "n_envs": {m.name: m.n_envs for m in self.schedule.members},
-                "pipelined": self.run_cfg.pipelined}
+                "pipelined": self.run_cfg.pipelined,
+                "d_embed": self.run_cfg.d_embed,
+                "n_shared_layers": self.run_cfg.n_shared_layers}
 
     # --- key bookkeeping ------------------------------------------------------
     def _keys(self, k: int) -> dict[str, jax.Array]:

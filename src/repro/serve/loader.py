@@ -1,0 +1,145 @@
+"""Restore a trained multitask policy from a fleet checkpoint — params only.
+
+`FleetRunner` checkpoints its full durability tree
+`{"params", "opt", "broker"}` (core/checkpoints.py layout: one .npy per
+leaf + a manifest of keystr paths).  Serving needs none of the optimizer
+moments or broker rings — on a big fleet they dwarf the policy — so the
+loader reads the manifest, selects exactly the `['params']...` leaves,
+and rebuilds the policy subtree against a template derived from the
+checkpoint's own metadata:
+
+  * scenario names come from `meta["scenarios"]` (written by every fleet
+    checkpoint), each resolved through the env registry so the serving
+    `MultiTaskConfig` carries the same `HeadSpec`s training used;
+  * trunk hyperparameters come from `meta["d_embed"]`/
+    `meta["n_shared_layers"]` when present, and are otherwise inferred
+    from the manifest itself (layer count from the
+    `['params']['shared']['actor'][i]` key lattice, width from the
+    recorded weight shapes) — checkpoints written before the meta fields
+    existed stay loadable;
+  * every selected leaf is validated (shape + dtype) against the template
+    before unflattening, so a config/checkpoint mismatch fails loudly
+    instead of serving garbage.
+
+The training mesh does not constrain the serving mesh: pass `mesh=` to
+re-place the restored tree replicated on a *different* topology via
+`core/elastic.reshard` (the preemption/restore path — a policy trained on
+a 2-shard mesh serves from a single-device box and vice versa).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
+from ..core import checkpoints, elastic
+from ..fleet import multitask
+
+_PARAMS_PREFIX = "['params']"
+_ACTOR_LAYER_RE = re.compile(
+    r"^\['params'\]\['shared'\]\['actor'\]\[(\d+)\]\['w'\]$")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadedPolicy:
+    """A restored, serve-ready policy: the params tree + the static config
+    that routes scenario names to heads, plus checkpoint provenance."""
+
+    params: dict
+    mcfg: multitask.MultiTaskConfig
+    step: int
+    meta: dict
+
+    @property
+    def scenarios(self) -> tuple[str, ...]:
+        return self.mcfg.names
+
+
+def _infer_trunk_shape(manifest: dict) -> tuple[int, int]:
+    """(d_embed, n_shared_layers) read off the manifest key lattice —
+    the fallback for checkpoints whose meta predates the explicit fields."""
+    layers: dict[int, list[int]] = {}
+    for key, shape in zip(manifest["keys"], manifest["shapes"]):
+        m = _ACTOR_LAYER_RE.match(key)
+        if m:
+            layers[int(m.group(1))] = shape
+    if not layers:
+        raise checkpoints.IntegrityError(
+            "checkpoint has no ['params']['shared']['actor'] leaves — not a "
+            "fleet (multitask) checkpoint")
+    n_layers = max(layers) + 1
+    d_embed = layers[0][-1]
+    return int(d_embed), int(n_layers)
+
+
+def _mcfg_from_manifest(manifest: dict, env_overrides: dict | None
+                        ) -> multitask.MultiTaskConfig:
+    from .. import envs
+
+    meta = manifest.get("meta", {})
+    names = meta.get("scenarios")
+    if not names:
+        raise checkpoints.IntegrityError(
+            "checkpoint meta carries no 'scenarios' list — cannot rebuild "
+            "the multitask heads (was this written by FleetRunner?)")
+    d_embed, n_layers = _infer_trunk_shape(manifest)
+    # the explicit meta fields (written since the serve subsystem landed)
+    # must agree with the arrays actually on disk
+    for field, inferred in (("d_embed", d_embed), ("n_shared_layers", n_layers)):
+        declared = meta.get(field)
+        if declared is not None and int(declared) != inferred:
+            raise checkpoints.IntegrityError(
+                f"checkpoint meta declares {field}={declared} but the stored "
+                f"arrays imply {inferred}")
+    overrides = env_overrides or {}
+    named = [(n, envs.make(n, **overrides.get(n, {}))) for n in names]
+    return multitask.MultiTaskConfig.from_envs(
+        named, d_embed=d_embed, n_shared_layers=n_layers)
+
+
+def load_policy(checkpoint_dir: str, step: int | None = None, *,
+                mesh: Mesh | None = None, verify: bool = True,
+                env_overrides: dict[str, dict] | None = None) -> LoadedPolicy:
+    """Restore the newest (or a specific) fleet checkpoint for serving.
+
+    Returns a `LoadedPolicy` whose `params` hold ONLY the policy subtree,
+    placed replicated on `mesh` when given (any topology — see module
+    docstring), as committed device arrays otherwise.  `env_overrides`
+    maps scenario name -> registry keyword overrides, for serving a head
+    against a re-parameterized env (the specs must stay identical).
+    """
+    if step is None:
+        step = checkpoints.latest_step(checkpoint_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no complete checkpoint under {checkpoint_dir!r}")
+    arrays, manifest = checkpoints.restore_arrays(checkpoint_dir, step,
+                                                  verify=verify)
+    mcfg = _mcfg_from_manifest(manifest, env_overrides)
+
+    selected = [a for key, a in zip(manifest["keys"], arrays)
+                if key.startswith(_PARAMS_PREFIX)]
+    template = jax.eval_shape(
+        lambda k: multitask.init(k, mcfg), jax.random.PRNGKey(0))
+    tdef = jax.tree.structure(template)
+    leaves = jax.tree.leaves(template)
+    if len(leaves) != len(selected):
+        raise checkpoints.IntegrityError(
+            f"policy template has {len(leaves)} leaves, checkpoint stores "
+            f"{len(selected)} under {_PARAMS_PREFIX}")
+    for i, (want, got) in enumerate(zip(leaves, selected)):
+        if tuple(want.shape) != tuple(got.shape) or want.dtype != got.dtype:
+            raise checkpoints.IntegrityError(
+                f"params leaf {i}: checkpoint {got.shape}/{got.dtype} != "
+                f"template {want.shape}/{want.dtype}")
+    params = jax.tree.unflatten(tdef, [np.asarray(a) for a in selected])
+    if mesh is not None:
+        params = elastic.reshard(params, mesh, PartitionSpec())
+    else:
+        params = jax.tree.map(jax.numpy.asarray, params)
+    return LoadedPolicy(params=params, mcfg=mcfg, step=int(step),
+                        meta=dict(manifest.get("meta", {})))

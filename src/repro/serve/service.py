@@ -1,0 +1,149 @@
+"""The serving dispatch layer: scenario-routed, bucket-compiled inference.
+
+`ControllerService` is what a solver talks to: submit observations by
+registered scenario name, flush, get greedy actions back.  Internals:
+
+  * ONE jitted program per (scenario, batch-bucket) — `serve_step` below,
+    compiled lazily the first time a bucket shape is dispatched and cached
+    by jit's shape cache thereafter (the service's `_step` wrapper is the
+    handle the trace auditor certifies against);
+  * the deterministic greedy-action path: `multitask.actor_mean`, the
+    EXACT function the training-time deterministic evaluation uses
+    (`core/rollout.py` with `deterministic=True`), so served actions are
+    bit-identical to training-time policy evaluation at fp32 — pinned by
+    tests/test_serve.py;
+  * a donated on-device telemetry buffer per scenario ([requests_served,
+    batches_served] int32): the counter updates in place every dispatch
+    (the same donation contract as the broker's ring pushes), and the hot
+    path never reads it back — `stats()` drains it on demand;
+  * padding discipline: the batcher pads rows up to the bucket, the
+    service slices every output back to `[:n_valid]` before a caller sees
+    it — padding rows can never leak.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fleet import multitask
+from .batcher import DEFAULT_BUCKETS, PendingBatch, RequestBatcher
+from .loader import LoadedPolicy, load_policy
+
+
+def serve_step(params: dict, mcfg: multitask.MultiTaskConfig, name: str,
+               obs: jax.Array, n_valid: jax.Array, stats: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One compiled serving dispatch for scenario `name` at one bucket shape.
+
+    obs: (bucket, E, *spatial, C) padded observation batch.
+    Returns (actions (bucket, E), values (bucket,), stats') — actions via
+    the deterministic greedy path (`actor_mean`), values from the critic
+    head, and the telemetry counter advanced by (n_valid requests, 1
+    batch).  `stats` is donated at the jit boundary: the counter updates
+    in place, never copied.
+    """
+    actions = multitask.actor_mean(params, mcfg, name, obs)
+    values = multitask.value(params, mcfg, name, obs)
+    stats = stats.at[0].add(n_valid.astype(stats.dtype)).at[1].add(1)
+    return actions, values, stats
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """One request's answer: the greedy per-element action and the critic's
+    value estimate for the submitted observation."""
+
+    uid: int
+    scenario: str
+    action: np.ndarray
+    value: float
+
+
+class ControllerService:
+    """Batched low-latency serving front-end over one trained policy tree."""
+
+    def __init__(self, params: dict, mcfg: multitask.MultiTaskConfig, *,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 max_slots: int = 64):
+        self.params = params
+        self.mcfg = mcfg
+        self.batcher = RequestBatcher(mcfg.names, buckets=buckets,
+                                      max_slots=max_slots)
+        # the (scenario, bucket) -> compiled-program map IS this wrapper's
+        # jit cache: mcfg/name are static, so each (name, bucket shape)
+        # pair traces exactly once; the stats buffer (argnum 5) is donated
+        self._step = jax.jit(serve_step, static_argnums=(1, 2),
+                             donate_argnums=(5,))
+        self._stats = {name: jnp.zeros((2,), jnp.int32)
+                       for name in mcfg.names}
+
+    @classmethod
+    def from_policy(cls, policy: LoadedPolicy, **kwargs) -> "ControllerService":
+        return cls(policy.params, policy.mcfg, **kwargs)
+
+    @property
+    def scenarios(self) -> tuple[str, ...]:
+        return self.mcfg.names
+
+    # --- request path ---------------------------------------------------------
+    def submit(self, scenario: str, obs: np.ndarray) -> int:
+        """Enqueue one observation (E, *spatial, C); returns the uid its
+        result will carry.  Shape-checked here so a malformed request fails
+        at submit time, not inside a compiled program."""
+        head = self.mcfg.head(scenario)   # raises on unknown scenarios
+        want = (head.n_elements, *head.spatial, head.channels)
+        obs = np.asarray(obs, dtype=np.float32)
+        if obs.shape != want:
+            raise ValueError(
+                f"{scenario!r} observation shape {obs.shape} != declared "
+                f"{want}")
+        return self.batcher.submit(scenario, obs)
+
+    def _dispatch(self, batch: PendingBatch) -> tuple[jax.Array, jax.Array]:
+        obs = jnp.asarray(batch.obs)
+        actions, values, self._stats[batch.scenario] = self._step(
+            self.params, self.mcfg, batch.scenario, obs,
+            jnp.asarray(batch.n_valid, jnp.int32),
+            self._stats[batch.scenario])
+        return actions, values
+
+    def flush(self) -> dict[int, ServeResult]:
+        """Serve everything pending: batch, dispatch, slice padding, free
+        the slots.  Returns {uid: ServeResult}."""
+        results: dict[int, ServeResult] = {}
+        for batch in self.batcher.flush():
+            actions, values = self._dispatch(batch)
+            acts = np.asarray(actions[: batch.n_valid])
+            vals = np.asarray(values[: batch.n_valid])
+            for i, (uid, slot) in enumerate(zip(batch.uids, batch.slots)):
+                results[uid] = ServeResult(
+                    uid=uid, scenario=batch.scenario, action=acts[i],
+                    value=float(vals[i]))
+                self.batcher.release(slot)
+        return results
+
+    def serve_batch(self, scenario: str, obs_batch: np.ndarray) -> np.ndarray:
+        """One-shot convenience: serve (B, E, *spatial, C) rows, returning
+        (B, E) greedy actions in row order (B may exceed the largest bucket
+        — the batcher chunks)."""
+        uids = [self.submit(scenario, row) for row in np.asarray(obs_batch)]
+        results = self.flush()
+        return np.stack([results[uid].action for uid in uids], axis=0)
+
+    # --- telemetry ------------------------------------------------------------
+    def stats(self) -> dict[str, dict[str, int]]:
+        """Host read of the per-scenario serving counters."""
+        return {name: {"requests": int(c[0]), "batches": int(c[1])}
+                for name, c in jax.device_get(self._stats).items()}
+
+
+def load_service(checkpoint_dir: str, step: int | None = None, *,
+                 mesh=None, buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 max_slots: int = 64, **load_kwargs) -> ControllerService:
+    """checkpoint directory -> ready service (loader + dispatch in one)."""
+    policy = load_policy(checkpoint_dir, step, mesh=mesh, **load_kwargs)
+    return ControllerService.from_policy(policy, buckets=buckets,
+                                         max_slots=max_slots)

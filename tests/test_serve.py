@@ -1,0 +1,492 @@
+"""Serving subsystem conformance suite (repro.serve).
+
+The acceptance-critical pins:
+
+  * served actions are BIT-IDENTICAL to training-time multitask policy
+    evaluation (`multitask.actor_mean` == the `deterministic=True`
+    rollout path) for EVERY registered scenario at fp32;
+  * the checkpoint -> serve round trip reproduces the in-memory trained
+    policy exactly on a reduced fleet run;
+  * the batcher's host-side contracts: arbitrary submit interleavings
+    preserve per-request ordering, padding rows never leak to a caller,
+    bucket selection is a deterministic pure function, batch-of-1 equals
+    batch-of-N row-wise, and slot recycling stays bounded/deterministic
+    (hypothesis properties where the input space is combinatorial);
+  * a checkpoint written on a DIFFERENT mesh shape restores and serves
+    bit-identically (`core/elastic.reshard` re-placement).
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs, fleet, serve
+from repro.core import checkpoints
+from repro.fleet import multitask
+from repro.fleet.pipeline import FleetRunnerConfig
+from repro.serve import (DEFAULT_BUCKETS, ControllerService, RequestBatcher,
+                         bucket_for)
+
+SCENARIOS = ("hit_les_reduced", "burgers_reduced")
+
+
+def _mcfg(names=SCENARIOS) -> multitask.MultiTaskConfig:
+    return multitask.MultiTaskConfig.from_envs(
+        [(n, envs.make(n)) for n in names])
+
+
+def _rand_obs(mcfg, name: str, n: int, seed: int = 1) -> np.ndarray:
+    head = mcfg.head(name)
+    shape = (n, head.n_elements, *head.spatial, head.channels)
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                        "float32"))
+
+
+def _service(names=SCENARIOS, **kwargs) -> tuple[ControllerService, dict]:
+    mcfg = _mcfg(names)
+    params = multitask.init(jax.random.PRNGKey(0), mcfg)
+    return ControllerService(params, mcfg, **kwargs), params
+
+
+def _trained_checkpoint(tmpdir, n_iterations: int = 2):
+    """A short reduced fleet run that leaves a checkpoint; returns the
+    runner (its in-memory params are the serving reference)."""
+    runner = fleet.make_fleet_runner(
+        SCENARIOS, total_envs=4,
+        run_cfg=FleetRunnerConfig(
+            n_iterations=n_iterations, eval_every=100,
+            checkpoint_every=n_iterations, async_checkpoint=False,
+            checkpoint_dir=str(tmpdir), bank_size=4),
+        use_artifacts=False)
+    runner.train(resume=False)
+    assert checkpoints.latest_step(str(tmpdir)) is not None
+    return runner
+
+
+# --- bucket selection ---------------------------------------------------------
+def test_bucket_for_minimal_and_deterministic():
+    for n in range(1, DEFAULT_BUCKETS[-1] + 1):
+        b = bucket_for(n)
+        assert b >= n
+        # minimality: no smaller ladder bucket fits
+        assert all(s < n for s in DEFAULT_BUCKETS if s < b)
+        assert bucket_for(n) == b  # pure
+    assert bucket_for(3, (2, 5, 9)) == 5
+
+
+def test_bucket_for_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        bucket_for(0)
+    with pytest.raises(ValueError):
+        bucket_for(-2)
+    with pytest.raises(ValueError):
+        bucket_for(DEFAULT_BUCKETS[-1] + 1)
+
+
+# --- batcher (deterministic pins) ---------------------------------------------
+def _row(v: float, shape=(2, 3)) -> np.ndarray:
+    return np.full(shape, v, np.float32)
+
+
+def test_batcher_fifo_order_and_chunking():
+    b = RequestBatcher(("a", "b"), buckets=(1, 2, 4), max_slots=32)
+    uids = [b.submit("a", _row(i)) for i in range(6)]  # 6 > cap 4: chunks
+    uid_b = b.submit("b", _row(99.0))
+    batches = b.flush()
+    # declared scenario order; 'a' chunked into a full max bucket + remainder
+    assert [x.scenario for x in batches] == ["a", "a", "b"]
+    assert batches[0].uids == tuple(uids[:4]) and batches[0].n_valid == 4
+    assert batches[1].uids == tuple(uids[4:]) and batches[1].n_valid == 2
+    assert batches[1].bucket == 2
+    assert batches[2].uids == (uid_b,) and batches[2].bucket == 1
+    for batch in batches:  # rows are the submitted obs, in arrival order
+        for i, uid in enumerate(batch.uids):
+            np.testing.assert_array_equal(batch.obs[i], _row(float(uid))
+                                          if batch.scenario == "a"
+                                          else _row(99.0))
+    assert b.n_pending == 0 and b.flush() == []
+
+
+def test_batcher_padding_repeats_last_real_row():
+    b = RequestBatcher(("a",), buckets=(4,), max_slots=8)
+    for i in range(3):
+        b.submit("a", _row(float(i)))
+    (batch,) = b.flush()
+    assert batch.bucket == 4 and batch.n_valid == 3
+    np.testing.assert_array_equal(batch.obs[3], batch.obs[2])  # the pad row
+    assert len(batch.uids) == len(batch.slots) == 3  # pads carry no identity
+
+
+def test_batcher_slot_recycling_lowest_first():
+    b = RequestBatcher(("a",), buckets=(1, 2, 4), max_slots=4)
+    b.submit("a", _row(0))
+    b.submit("a", _row(1))
+    (batch,) = b.flush()
+    assert batch.slots == (0, 1)
+    b.release(0)          # slot 1 still outstanding
+    assert b.n_free_slots == 3
+    b.submit("a", _row(2))
+    (batch2,) = b.flush()
+    assert batch2.slots == (0,)  # lowest free slot reused deterministically
+    with pytest.raises(ValueError):
+        b.release(2)       # never handed out
+    with pytest.raises(ValueError):
+        b.release(99)      # out of range
+
+
+def test_batcher_backpressure_and_unknown_scenario():
+    b = RequestBatcher(("a",), buckets=(1, 2), max_slots=2)
+    b.submit("a", _row(0))
+    b.submit("a", _row(1))
+    with pytest.raises(RuntimeError, match="no free request slots"):
+        b.submit("a", _row(2))
+    with pytest.raises(KeyError, match="unknown scenario"):
+        b.submit("nope", _row(0))
+    (batch,) = b.flush()
+    for s in batch.slots:
+        b.release(s)
+    assert b.submit("a", _row(3)) == 2  # uids keep counting after recovery
+
+
+def test_batcher_rejects_bad_buckets():
+    for bad in ((), (2, 1), (1, 1, 2), (0, 1)):
+        with pytest.raises((ValueError, IndexError)):
+            RequestBatcher(("a",), buckets=bad)
+
+
+# --- batcher (hypothesis properties) ------------------------------------------
+def test_batcher_interleaving_properties():
+    """Arbitrary submit interleavings across scenarios: per-scenario FIFO
+    uid order survives batching, every request appears exactly once, rows
+    match their uids, and bucket selection is the pure minimal bucket."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=150, deadline=None)
+    @given(plan=st.lists(st.sampled_from(["a", "b", "c"]),
+                         min_size=1, max_size=40))
+    def prop(plan):
+        b = RequestBatcher(("a", "b", "c"), buckets=(1, 2, 4, 8),
+                           max_slots=64)
+        submitted = {"a": [], "b": [], "c": []}
+        for scen in plan:
+            uid = b.submit(scen, _row(0.0))
+            submitted[scen].append(uid)
+        batches = b.flush()
+        seen = {"a": [], "b": [], "c": []}
+        for batch in batches:
+            assert batch.bucket == bucket_for(batch.n_valid, (1, 2, 4, 8))
+            assert len(batch.uids) == batch.n_valid <= batch.bucket
+            assert batch.obs.shape[0] == batch.bucket  # padded to the bucket
+            seen[batch.scenario].extend(batch.uids)
+        for scen in ("a", "b", "c"):  # FIFO per scenario, nothing lost/dup'd
+            assert seen[scen] == submitted[scen]
+        assert b.n_free_slots == 64 - len(plan)  # pads consumed no slots
+
+    prop()
+
+
+def test_batcher_slot_pool_bounded_property():
+    """Any submit/flush+release schedule keeps outstanding slots <=
+    max_slots, refuses loudly at the bound, and recycles released ids."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=100, deadline=None)
+    @given(ops=st.lists(st.sampled_from(["submit", "drain"]),
+                        min_size=1, max_size=30))
+    def prop(ops):
+        cap = 4
+        b = RequestBatcher(("a",), buckets=(1, 2, 4), max_slots=cap)
+        outstanding = 0
+        for op in ops:
+            if op == "submit":
+                if outstanding == cap:
+                    with pytest.raises(RuntimeError):
+                        b.submit("a", _row(0.0))
+                else:
+                    b.submit("a", _row(0.0))
+                    outstanding += 1
+            else:
+                for batch in b.flush():
+                    for s in batch.slots:
+                        b.release(s)
+                        outstanding -= 1
+            assert b.n_free_slots == cap - outstanding
+        all_slots = [s for batch in b.flush() for s in batch.slots]
+        assert all(0 <= s < cap for s in all_slots)
+
+    prop()
+
+
+def test_serve_batch1_equals_batchN_property():
+    """Row-wise bit-identity between batch-of-1 and batch-of-N serving —
+    padding and batch position must not perturb a row's action."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    svc, params = _service(("burgers_reduced",), buckets=(1, 2, 4, 8),
+                           max_slots=32)
+    obs = _rand_obs(svc.mcfg, "burgers_reduced", 8)
+    singles = np.stack([svc.serve_batch("burgers_reduced", obs[i:i + 1])[0]
+                        for i in range(8)])
+
+    @settings(max_examples=25, deadline=None)
+    @given(rows=st.lists(st.integers(min_value=0, max_value=7),
+                         min_size=1, max_size=8))
+    def prop(rows):
+        got = svc.serve_batch("burgers_reduced", obs[rows])
+        np.testing.assert_array_equal(got, singles[rows])
+
+    prop()
+
+
+# --- service conformance ------------------------------------------------------
+def test_served_actions_bit_identical_all_registered_scenarios():
+    """THE conformance pin: for every scenario in the registry, the served
+    greedy action equals training-time multitask evaluation bit-for-bit at
+    fp32 — through the full submit/pad/dispatch/slice path, at a batch
+    size that forces padding."""
+    names = envs.registered()
+    mcfg = _mcfg(names)
+    params = multitask.init(jax.random.PRNGKey(7), mcfg)
+    svc = ControllerService(params, mcfg, buckets=(1, 2, 4), max_slots=16)
+    ref = jax.jit(multitask.actor_mean, static_argnums=(1, 2))
+    for name in names:
+        obs = _rand_obs(mcfg, name, 3, seed=11)  # 3 -> bucket 4: one pad row
+        got = svc.serve_batch(name, obs)
+        want = np.asarray(ref(params, mcfg, name, obs))
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(got, want), name
+
+
+def test_served_actions_match_training_policy_fns():
+    """The training rollout's deterministic path goes through
+    `multitask.policy_fns(...).mean` — pin the service against that exact
+    adapter, not just actor_mean."""
+    svc, params = _service()
+    for name in SCENARIOS:
+        fns = multitask.policy_fns(svc.mcfg, name)
+        obs = _rand_obs(svc.mcfg, name, 2, seed=3)
+        got = svc.serve_batch(name, obs)
+        want = np.asarray(jax.jit(fns.mean)(params, obs))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_flush_results_and_telemetry():
+    svc, _ = _service(buckets=(1, 2, 4), max_slots=16)
+    uids = {}
+    for name in SCENARIOS:
+        for i in range(3):
+            uids[svc.submit(name, _rand_obs(svc.mcfg, name, 1, seed=i)[0])] \
+                = name
+    results = svc.flush()
+    assert set(results) == set(uids)  # every request answered, none extra
+    for uid, res in results.items():
+        assert res.uid == uid and res.scenario == uids[uid]
+        head = svc.mcfg.head(res.scenario)
+        assert res.action.shape == (head.n_elements,)
+        assert np.isfinite(res.action).all() and np.isfinite(res.value)
+    stats = svc.stats()
+    for name in SCENARIOS:  # 3 requests -> one padded bucket-4 batch each
+        assert stats[name] == {"requests": 3, "batches": 1}
+    assert svc.flush() == {}  # drained
+    assert svc.batcher.n_free_slots == 16  # all slots recycled
+
+
+def test_submit_shape_checked_at_the_edge():
+    svc, _ = _service()
+    good = _rand_obs(svc.mcfg, "burgers_reduced", 1)[0]
+    with pytest.raises(ValueError, match="observation shape"):
+        svc.submit("burgers_reduced", good[:-1])
+    with pytest.raises(KeyError):
+        svc.submit("not_registered", good)
+    assert svc.batcher.n_pending == 0  # rejected requests consumed nothing
+
+
+# --- checkpoint -> serve ------------------------------------------------------
+def test_checkpoint_serve_bit_identical_to_trained_policy(tmp_path):
+    """Reduced fleet run -> checkpoint -> `load_service`: the restored
+    params ARE the trained params (leaf-wise exact) and the served actions
+    equal in-memory training-time evaluation bit-for-bit."""
+    runner = _trained_checkpoint(tmp_path / "ckpt")
+    svc = serve.load_service(str(tmp_path / "ckpt"), max_slots=16)
+    assert svc.scenarios == SCENARIOS
+
+    trained = jax.tree.leaves(runner.params)
+    restored = jax.tree.leaves(svc.params)
+    assert len(trained) == len(restored)
+    for a, b in zip(trained, restored):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    for name in SCENARIOS:
+        obs = _rand_obs(svc.mcfg, name, 3, seed=5)
+        got = svc.serve_batch(name, obs)
+        want = np.asarray(multitask.actor_mean(runner.params, runner.mcfg,
+                                               name, jnp.asarray(obs)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_load_policy_provenance_and_specific_step(tmp_path):
+    _trained_checkpoint(tmp_path / "ckpt")
+    step = checkpoints.latest_step(str(tmp_path / "ckpt"))
+    policy = serve.load_policy(str(tmp_path / "ckpt"), step)
+    assert policy.step == step
+    assert policy.scenarios == SCENARIOS
+    assert policy.meta["scenarios"] == list(SCENARIOS)
+    assert policy.meta["d_embed"] == policy.mcfg.d_embed
+    with pytest.raises(FileNotFoundError):
+        serve.load_policy(str(tmp_path / "empty"))
+
+
+# --- loader robustness --------------------------------------------------------
+def _manifest_path(ckpt_dir: str) -> str:
+    step = checkpoints.latest_step(ckpt_dir)
+    return os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+
+
+def test_loader_infers_trunk_from_legacy_manifest(tmp_path):
+    """Checkpoints written before the explicit d_embed/n_shared_layers meta
+    fields must stay loadable — the loader reads the trunk shape off the
+    manifest key lattice."""
+    _trained_checkpoint(tmp_path / "ckpt")
+    path = _manifest_path(str(tmp_path / "ckpt"))
+    with open(path) as f:
+        manifest = json.load(f)
+    declared = (manifest["meta"].pop("d_embed"),
+                manifest["meta"].pop("n_shared_layers"))
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+    policy = serve.load_policy(str(tmp_path / "ckpt"))
+    assert (policy.mcfg.d_embed, policy.mcfg.n_shared_layers) == declared
+
+
+def test_loader_rejects_mismatched_trunk_meta(tmp_path):
+    _trained_checkpoint(tmp_path / "ckpt")
+    path = _manifest_path(str(tmp_path / "ckpt"))
+    with open(path) as f:
+        manifest = json.load(f)
+    manifest["meta"]["d_embed"] = 9999
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(checkpoints.IntegrityError, match="d_embed"):
+        serve.load_policy(str(tmp_path / "ckpt"))
+
+
+def test_loader_rejects_non_fleet_checkpoint(tmp_path):
+    # a tree with a params subtree but no multitask trunk
+    checkpoints.save(str(tmp_path), 1,
+                     {"params": {"w": np.zeros((2, 2), np.float32)}},
+                     meta={"scenarios": list(SCENARIOS)})
+    with pytest.raises(checkpoints.IntegrityError, match="actor"):
+        serve.load_policy(str(tmp_path))
+    # and one with no scenario provenance at all
+    checkpoints.save(str(tmp_path), 2,
+                     {"params": {"w": np.zeros((2, 2), np.float32)}})
+    with pytest.raises(checkpoints.IntegrityError, match="scenarios"):
+        serve.load_policy(str(tmp_path))
+
+
+# --- different-mesh restore (elastic.reshard) ---------------------------------
+def test_load_policy_onto_explicit_mesh(tmp_path):
+    """In-process reshard path: the restored tree re-places replicated on
+    the serving host mesh and serves identically to the unplaced load."""
+    from repro.launch import mesh as mesh_lib
+
+    runner = _trained_checkpoint(tmp_path / "ckpt")
+    svc = serve.load_service(str(tmp_path / "ckpt"),
+                             mesh=mesh_lib.make_host_mesh(), max_slots=8)
+    name = SCENARIOS[0]
+    obs = _rand_obs(svc.mcfg, name, 2, seed=9)
+    got = svc.serve_batch(name, obs)
+    want = np.asarray(multitask.actor_mean(runner.params, runner.mcfg, name,
+                                           jnp.asarray(obs)))
+    np.testing.assert_array_equal(got, want)
+
+
+_MESH_WORKER = r"""
+import os, sys, json
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=2")
+import jax
+import numpy as np
+assert len(jax.devices()) == 2, jax.devices()
+
+from repro import fleet
+from repro.fleet import multitask
+from repro.fleet.pipeline import FleetRunnerConfig
+from repro.launch import mesh as mesh_lib
+
+ckpt_dir, ref_path = sys.argv[1], sys.argv[2]
+mesh = mesh_lib.make_host_mesh()          # 2-device training mesh
+assert int(np.prod(list(mesh.shape.values()))) == 2
+runner = fleet.make_fleet_runner(
+    ("hit_les_reduced", "burgers_reduced"), total_envs=4, mesh=mesh,
+    run_cfg=FleetRunnerConfig(n_iterations=2, eval_every=100,
+                              checkpoint_every=2, async_checkpoint=False,
+                              checkpoint_dir=ckpt_dir, bank_size=4),
+    use_artifacts=False)
+runner.train(resume=False)
+
+ref = {}
+for name in runner.mcfg.names:
+    head = runner.mcfg.head(name)
+    obs = jax.random.normal(
+        jax.random.PRNGKey(13),
+        (3, head.n_elements, *head.spatial, head.channels), "float32")
+    acts = multitask.actor_mean(runner.params, runner.mcfg, name, obs)
+    ref[name] = {"obs": np.asarray(obs).tolist(),
+                 "actions": np.asarray(acts).tolist()}
+with open(ref_path, "w") as f:
+    json.dump(ref, f)
+print("mesh worker ok")
+"""
+
+
+@pytest.mark.slow
+def test_restore_from_different_mesh_shape(tmp_path):
+    """A checkpoint trained on a 2-device mesh (forced host platform
+    devices, fresh subprocess) restores on this 1-device process and
+    serves actions bit-identical to the training process's own
+    evaluation."""
+    ckpt_dir = str(tmp_path / "ckpt2dev")
+    ref_path = str(tmp_path / "ref.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_WORKER, ckpt_dir, ref_path],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "mesh worker ok" in proc.stdout
+
+    assert len(jax.devices()) == 1  # genuinely a different serving topology
+    svc = serve.load_service(ckpt_dir, max_slots=8)
+    with open(ref_path) as f:
+        ref = json.load(f)
+    for name, rec in ref.items():
+        obs = np.asarray(rec["obs"], np.float32)
+        want = np.asarray(rec["actions"], np.float32)
+        got = svc.serve_batch(name, obs)
+        np.testing.assert_array_equal(got, want)
+
+
+# --- static-analysis registration ---------------------------------------------
+def test_serve_entrypoint_registered_and_audits_clean():
+    """The serve program is a first-class repro-lint entry: it traces, its
+    donation expectations hold in the lowered program, and no audit rule
+    fires."""
+    from repro.analysis import entrypoints, jaxpr_audit
+
+    entry = entrypoints.get("serve_step")
+    findings = jaxpr_audit.audit_entry(entry)
+    active = [f for f in findings if not f.suppressed]
+    assert active == [], [f.message for f in active]
